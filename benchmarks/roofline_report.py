@@ -1,0 +1,104 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from results JSON.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [results/dryrun.json]
+Writes markdown to stdout; EXPERIMENTS.md embeds the output.
+"""
+import json
+import sys
+from collections import defaultdict
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def dominant_short(d):
+    return {"compute_s": "compute", "memory_s": "memory",
+            "collective_s": "collective"}.get(d, d)
+
+
+def table(recs, tag, mesh):
+    rows = [r for r in recs if r.get("tag") == tag and r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | status | mem/dev | fits | compute | memory | "
+           "collective | dominant | useful | roofline |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | skipped | - | - | - |"
+                       f" - | - | - | - | - |")
+            continue
+        if r["status"] == "error":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - | - |"
+                       f" - | - | - | - | - |")
+            continue
+        m, rl = r["memory"], r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {fmt_bytes(m['total_per_device'])} "
+            f"| {'Y' if m['fits_16GB'] else 'N'} "
+            f"| {fmt_s(rl['compute_s'])} | {fmt_s(rl['memory_s'])} "
+            f"| {fmt_s(rl['collective_s'])} | {dominant_short(rl['dominant'])} "
+            f"| {rl['useful_flops_ratio']:.2f} "
+            f"| {rl['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def compare(recs, arch, shape, mesh="single"):
+    """Before/after across tags for one cell (the §Perf iteration log)."""
+    rows = [r for r in recs if r["arch"] == arch and r["shape"] == shape
+            and r["mesh"] == mesh and r["status"] == "ok"]
+    order = {None: 0, "moe-dispatch-v2": 1, "opt-v3": 2}
+    rows.sort(key=lambda r: order.get(r.get("tag"), 99))
+    out = [f"**{arch} × {shape} ({mesh}-pod)**", "",
+           "| variant | compute | memory | collective | dominant | mem/dev | roofline |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rl, m = r["roofline"], r["memory"]
+        out.append(f"| {r.get('tag') or 'baseline'} | {fmt_s(rl['compute_s'])} "
+                   f"| {fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} "
+                   f"| {dominant_short(rl['dominant'])} "
+                   f"| {fmt_bytes(m['total_per_device'])} "
+                   f"| {rl['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    recs = json.load(open(path))
+    tags = sorted({r.get("tag") for r in recs}, key=lambda t: (t is not None, t))
+    print("## Roofline tables\n")
+    for tag in tags:
+        for mesh in ("single", "multi"):
+            if not any(r.get("tag") == tag and r["mesh"] == mesh for r in recs):
+                continue
+            print(f"### tag={tag or 'baseline'} mesh={mesh} "
+                  f"({256 if mesh=='single' else 512} chips)\n")
+            print(table(recs, tag, mesh))
+            print()
+    print("## Hillclimb comparisons\n")
+    for arch, shape in (("kimi-k2-1t-a32b", "train_4k"),
+                        ("mixtral-8x22b", "prefill_32k"),
+                        ("qwen2-0.5b", "prefill_32k")):
+        print(compare(recs, arch, shape))
+        print()
+
+
+if __name__ == "__main__":
+    main()

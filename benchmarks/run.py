@@ -1,0 +1,194 @@
+"""Benchmark harness — one function per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+measured operation; derived = the table's headline quantity).
+
+Tables:
+  two_way_cost        Example 1.1 vs 1.2: naive r+ks vs Shares 2√(krs), k sweep
+  skew_balance        zipf-α sweep: max reducer load, naive vs SkewShares plan
+  residual_decomp     running example (§3/§5): per-residual cost expressions
+  moe_dispatch        hot-expert imbalance: classical EP vs SkewShares slots
+  executor_e2e        end-to-end distributed join on the virtual mesh
+  kernel_throughput   hash_partition / match_counts / segment_histogram
+  planner_latency     plan_skew_join wall time vs #HH (control-plane budget)
+"""
+import os
+
+# The executor benchmark needs a small multi-device mesh (8, NOT the dry-run's
+# 512 — that flag belongs to launch/dryrun.py alone).  Must precede jax import.
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8").strip()
+
+import time
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def row(name: str, us: float, derived: str) -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _timeit(fn, reps=3):
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+# ---------------------------------------------------------------------------
+
+def bench_two_way_cost():
+    """Paper Examples 1.1/1.2: the headline communication-cost comparison."""
+    from repro.core import (naive_hh_cost, optimize_shares, shares_hh_cost,
+                            two_way)
+    r, s = 10**7, 10**5
+    for k in (16, 64, 256, 1024, 4096):
+        q = two_way(r, s)
+        us, sol = _timeit(lambda: optimize_shares(q, k, frozen=frozenset({"B"})))
+        naive = naive_hh_cost(r, s, k)
+        opt = shares_hh_cost(r, s, k)
+        row(f"two_way_cost/k={k}", us,
+            f"naive={naive:.3e};shares_cont={opt:.3e};"
+            f"shares_int={sol.cost:.3e};speedup={naive/sol.cost:.2f}x")
+
+
+def bench_skew_balance():
+    """Max reducer load under zipf skew: plain Shares vs SkewShares."""
+    from repro.core import plan_no_skew, plan_skew_join, two_way
+    from repro.data import skewed_join_dataset
+    k, n = 64, 40_000
+    for alpha in (0.0, 0.8, 1.2, 1.6, 2.0):
+        q = two_way()
+        data = skewed_join_dataset(q, n, 1000, skew={"B": alpha}, seed=1)
+        us, plan = _timeit(lambda: plan_skew_join(q, data, k), reps=1)
+        l_skew = plan.reducer_loads(data)
+        l_flat = plan_no_skew(q, data, k).reducer_loads(data)
+        row(f"skew_balance/alpha={alpha}", us,
+            f"max_naive={l_flat.max()};max_shares={l_skew.max()};"
+            f"imbalance_naive={l_flat.max()/max(l_flat.mean(),1):.1f};"
+            f"imbalance_shares={l_skew.max()/max(l_skew.mean(),1):.1f};"
+            f"hh={plan.hhs.total()};residuals={len(plan.residuals)}")
+
+
+def bench_residual_decomp():
+    """Running example §3/§5: the six residual joins and their plans."""
+    from repro.core import plan_skew_join, running_example
+    from repro.data import skewed_join_dataset
+    q = running_example()
+    data = skewed_join_dataset(q, 20_000, 400, skew={"B": 1.6, "C": 1.3}, seed=2)
+    us, plan = _timeit(lambda: plan_skew_join(q, data, 256, max_hh_per_attr=2),
+                       reps=1)
+    for rp in plan.residuals:
+        shares = "x".join(f"{a}:{s}" for a, s in
+                          zip(rp.cube.attr_order, rp.cube.shares))
+        row(f"residual/{rp.residual.combo}", us / len(plan.residuals),
+            f"expr={rp.residual.expr};k_i={rp.k_i};shares={shares or '1'};"
+            f"cost={rp.cost:.3e}")
+    row("residual/total", us,
+        f"total_cost={plan.total_cost:.3e};reducers={plan.reducers_used}")
+
+
+def bench_moe_dispatch():
+    """MoE expert dispatch: classical one-owner EP vs SkewShares replication."""
+    from repro.core.moe_shares import dispatch_cost, plan_dispatch
+    rng = np.random.default_rng(0)
+    E = 64
+    for hot_frac in (0.1, 0.3, 0.5):
+        loads = rng.uniform(50, 150, E)
+        total = loads.sum() / (1 - hot_frac)
+        loads[0] = total * hot_frac          # one expert takes hot_frac of tokens
+        us, skew = _timeit(lambda: plan_dispatch(loads, int(E * 1.25)))
+        classical = plan_dispatch(loads, E)  # no spare slots -> g=1 everywhere
+        c = dispatch_cost(loads, classical, weight_cost=1e4)
+        s = dispatch_cost(loads, skew, weight_cost=1e4)
+        row(f"moe_dispatch/hot={hot_frac}", us,
+            f"max_classical={c['max_slot_load']:.0f};"
+            f"max_shares={s['max_slot_load']:.0f};"
+            f"straggle_reduction={c['max_slot_load']/s['max_slot_load']:.2f}x;"
+            f"replicas={int(skew.group_size.max())}")
+
+
+def bench_executor_e2e():
+    """End-to-end distributed skewed join on the virtual device mesh."""
+    import jax
+    if len(jax.devices()) < 8:
+        row("executor_e2e/skipped", 0.0, "needs 8 devices")
+        return
+    from repro.core import plan_skew_join, reference_join, two_way
+    from repro.core.executor import ExecutorConfig, ShardedJoinExecutor
+    from repro.data import skewed_join_dataset
+    mesh = jax.make_mesh((8,), ("cells",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    q = two_way()
+    data = skewed_join_dataset(q, 3_000, 3_000, skew={"B": 1.0}, seed=3)
+    plan = plan_skew_join(q, data, 8)
+    ex = ShardedJoinExecutor(plan, mesh,
+                             config=ExecutorConfig(out_capacity=131072))
+    us, res = _timeit(lambda: ex.run(data), reps=1)
+    n_out = int(res["valid"].sum())
+    n_ref = len(reference_join(q, data))
+    recv = res["recv_counts"].astype(float)
+    row("executor_e2e/two_way_3k", us,
+        f"out_rows={n_out};ref_rows={n_ref};exact={n_out==n_ref};"
+        f"recv_imbalance={recv.max()/max(recv.mean(),1):.2f};"
+        f"shuffle_overflow={int(res['shuffle_overflow'].sum())};"
+        f"join_overflow={int(res['join_overflow'].sum())}")
+
+
+def bench_kernel_throughput():
+    """Kernel wrappers (jit'd ref path on CPU; Pallas compiles on TPU)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    n = 1 << 20
+    keys = jnp.asarray(np.random.default_rng(0).integers(0, 1 << 30, n),
+                       jnp.int32)
+    f1 = jax.jit(lambda k: ref.hash_partition_ref(k, 0x9E3779B1, 256))
+    us, _ = _timeit(lambda: jax.block_until_ready(f1(keys)), reps=5)
+    row("kernel/hash_partition_1M", us, f"keys_per_s={n/(us/1e6):.3e}")
+    probe = keys[:1 << 14]
+    build = keys[:1 << 12]
+    f2 = jax.jit(ref.match_counts_ref)
+    us, _ = _timeit(lambda: jax.block_until_ready(f2(probe, build)), reps=5)
+    row("kernel/match_counts_16kx4k", us,
+        f"cmp_per_s={(probe.size*build.size)/(us/1e6):.3e}")
+    vals = keys % 384
+    f3 = jax.jit(lambda v: ref.segment_histogram_ref(v, 384))
+    us, _ = _timeit(lambda: jax.block_until_ready(f3(vals)), reps=5)
+    row("kernel/segment_histogram_1M", us, f"vals_per_s={n/(us/1e6):.3e}")
+
+
+def bench_planner_latency():
+    """Control-plane budget: plan_skew_join latency vs #HH."""
+    from repro.core import plan_skew_join, two_way
+    from repro.data import skewed_join_dataset
+    q = two_way()
+    for max_hh in (1, 4, 16, 64):
+        data = skewed_join_dataset(q, 50_000, 200, skew={"B": 1.4}, seed=4)
+        us, plan = _timeit(
+            lambda: plan_skew_join(q, data, 256, max_hh_per_attr=max_hh),
+            reps=1)
+        row(f"planner/max_hh={max_hh}", us,
+            f"hh={plan.hhs.total()};residuals={len(plan.residuals)};"
+            f"cost={plan.total_cost:.3e}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_two_way_cost()
+    bench_skew_balance()
+    bench_residual_decomp()
+    bench_moe_dispatch()
+    bench_executor_e2e()
+    bench_kernel_throughput()
+    bench_planner_latency()
+    print(f"# {len(ROWS)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Train a small LM end-to-end (data -> pjit step -> ckpt -> resume).
+
+Uses the production driver (launch/train.py) machinery on a reduced config:
+~6M-param qwen2-style model, a few hundred steps on CPU, loss must descend.
+`--fail-at-step` demonstrates the elastic-restart path.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8").strip()
+
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    argv = ["--arch", "qwen2-0.5b", "--reduced", "--steps", "200",
+            "--batch", "8", "--seq", "64", "--lr", "1e-3",
+            "--ckpt-every", "100", "--ckpt-dir", "/tmp/repro_example_ckpt",
+            "--log-every", "20"]
+    argv += sys.argv[1:]
+    sys.argv = ["train"] + argv
+    train_main()
+
+
+if __name__ == "__main__":
+    main()

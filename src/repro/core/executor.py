@@ -1,0 +1,320 @@
+"""Distributed SkewShares execution engine: map -> shuffle -> reduce in JAX.
+
+The MapReduce round of the paper, realized with `shard_map` over a 1-D device
+axis whose devices ARE the reducers:
+
+  map     per-device: route each local tuple to its residual-join cells
+          (multiply-shift hashes on non-HH attributes — the Pallas
+          `hash_partition` kernel — plus static replication over the axes the
+          relation lacks, per Hypercube.route).
+  shuffle one fixed-capacity `all_to_all` per relation.  MapReduce shuffles are
+          ragged; TPU collectives are dense, so tuples are packed MoE-style
+          (sort by destination, position-in-group via searchsorted, scatter
+          with mode='drop').  The Shares plan is exactly what makes a small
+          static capacity sufficient — per-cell load is balanced by
+          construction; overflow counters report when it wasn't.
+  reduce  per-device: local multiway join of whatever arrived.  Counting uses
+          the Pallas `match_counts` kernel; pair expansion is a static-shape
+          `jnp.nonzero(size=...)` over the match matrix (TPUs like sizing +
+          gather, not scatter).
+
+Cells of every residual join live in one flat LOGICAL reducer space
+(Hypercube.offset, cumulative across residual blocks); physical placement wraps
+modulo the device count, so one shuffle serves all residual joins at once — the
+paper's "one MapReduce job" property — even when there are more logical cells
+than devices.  Every routed tuple copy carries its logical cell id as a hidden
+column and the local join matches ONLY within equal logical cells: logical
+cells partition the join output by construction (each output tuple's values
+determine exactly one cell of exactly one residual), so shared physical cells
+can never produce cross-residual or cross-cell duplicates.  (An earlier
+origin-dedup scheme was insufficient — constituents arriving via DIFFERENT
+residuals at a shared cell could still join; caught by
+tests/test_executor.py::test_four_relation_chain_join.)
+
+Conventions: attribute values are int32 ≥ 0; -1 marks invalid/padding rows.
+`k` (total reducers) must equal the mesh axis size here; production meshes fold
+many logical cells per device (see launch/mesh.py notes).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..kernels import ops as kops
+from .hypercube import hash_seed
+from .plan import JoinQuery
+from .skewjoin import SkewJoinPlan
+
+INVALID = -1
+
+
+@dataclass(frozen=True)
+class ExecutorConfig:
+    capacity_factor: float = 2.0       # shuffle slack over the max observed load
+    out_capacity: int = 4096           # per-cell join output rows (static)
+    use_kernels: bool = True           # hash/count via Pallas (else jnp ref path)
+
+
+@dataclass(frozen=True)
+class _Route:
+    """Static routing recipe for one (residual, relation) pair."""
+    rel: str
+    hashed: tuple[tuple[int, int, int, int], ...]  # (col, seed, share, stride)
+    rep_strides: tuple[int, ...]                   # flattened replication offsets
+    offset: int
+    k: int                                          # cells wrap modulo k
+    # Type constraints (paper Example 3.2): which rows participate.
+    eq_constraints: tuple[tuple[int, int], ...]    # (col, value) must equal
+    notin_constraints: tuple[tuple[int, tuple[int, ...]], ...]  # (col, hh_values)
+
+
+def _build_routes(plan: SkewJoinPlan) -> dict[str, list[_Route]]:
+    """Per relation: one `_Route` per residual join (static, host-side)."""
+    routes: dict[str, list[_Route]] = {r.name: [] for r in plan.query.relations}
+    for rp in plan.residuals:
+        cube = rp.cube
+        strides = cube.strides()
+        assign = rp.residual.combo.as_dict
+        for rel in plan.query.relations:
+            hashed, wild = [], []
+            for ax, (attr, share) in enumerate(zip(cube.attr_order, cube.shares)):
+                if attr in rel.attrs:
+                    hashed.append((rel.attrs.index(attr),
+                                   hash_seed(attr, cube.salt), share, strides[ax]))
+                else:
+                    wild.append((strides[ax], share))
+            # Flattened replication offsets (static fanout).
+            reps = np.zeros(1, dtype=np.int64)
+            for stride, share in wild:
+                reps = (reps[:, None] + np.arange(share) * stride).ravel()
+            eqs, notins = [], []
+            for i, attr in enumerate(rel.attrs):
+                hh_vals = plan.hhs.values(attr)
+                if not hh_vals:
+                    continue
+                if attr in assign:
+                    eqs.append((i, int(assign[attr])))
+                else:
+                    notins.append((i, tuple(int(v) for v in hh_vals)))
+            routes[rel.name].append(_Route(
+                rel.name, tuple(hashed), tuple(int(x) for x in reps),
+                cube.offset, plan.k, tuple(eqs), tuple(notins)))
+    return routes
+
+
+def _route_rows(rows: jnp.ndarray, route: _Route, use_kernels: bool
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(phys_dest (n·fanout,), rows_tagged (n·fanout, w+1)).
+
+    Each routed copy gets its LOGICAL cell id appended as the last column —
+    the local-join key that makes shared physical cells exact.  phys dest =
+    logical % k; -1 marks non-members."""
+    n = rows.shape[0]
+    member = rows[:, 0] != INVALID
+    for col, val in route.eq_constraints:
+        member &= rows[:, col] == val
+    for col, vals in route.notin_constraints:
+        hit = jnp.zeros((n,), bool)
+        for v in vals:
+            hit |= rows[:, col] == v
+        member &= ~hit
+    if route.hashed and use_kernels:
+        # Fused Pallas router: one VMEM pass for all hashed attributes.
+        base = kops.route_cells(rows, route.hashed)
+    elif route.hashed:
+        from ..kernels.ref import route_cells_ref
+        base = route_cells_ref(rows, route.hashed)
+    else:
+        base = jnp.zeros((n,), jnp.int32)
+    reps = jnp.asarray(route.rep_strides, jnp.int32)        # (fanout,)
+    logical = base[:, None] + reps[None, :] + route.offset  # (n, fanout)
+    logical = jnp.where(member[:, None], logical, INVALID)
+    dest = jnp.where(member[:, None], logical % route.k, INVALID)
+    fanout = reps.shape[0]
+    rows_rep = jnp.broadcast_to(rows[:, None, :], (n, fanout, rows.shape[1]))
+    tagged = jnp.concatenate(
+        [rows_rep, logical[:, :, None].astype(rows.dtype)], axis=-1)
+    return dest.reshape(-1), tagged.reshape(n * fanout, -1)
+
+
+def _pack_buckets(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter (dest, rows) into a (k, cap, w) buffer; returns (buf, overflow)."""
+    m, w = rows.shape
+    big = jnp.where(dest < 0, jnp.int32(k), dest.astype(jnp.int32))  # invalid last
+    order = jnp.argsort(big, stable=True)
+    sd, sr = big[order], rows[order]
+    start = jnp.searchsorted(sd, sd, side="left")
+    pos = jnp.arange(m, dtype=jnp.int32) - start.astype(jnp.int32)
+    valid = sd < k
+    overflow = ((pos >= cap) & valid).sum()
+    buf = jnp.full((k, cap, w), INVALID, dtype=rows.dtype)
+    buf = buf.at[sd, pos].set(sr, mode="drop")   # pos ≥ cap or sd = k -> dropped
+    return buf, overflow
+
+
+def _local_join(frags: dict[str, jnp.ndarray], query: JoinQuery, cap_out: int,
+                use_kernels: bool) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cascade natural join of one cell's fragments.
+
+    Every fragment row carries its LOGICAL cell id as the last column; the
+    cascade joins on (shared named attributes AND equal logical cell), so a
+    physical cell hosting several logical cells computes each logical cell's
+    join independently — structural exactness for wrapped residual blocks.
+
+    Returns (rows (cap_out, n_attrs), valid (cap_out,), overflow ())."""
+    rels = list(query.relations)
+    acc = frags[rels[0].name]                      # columns: attrs + [cell]
+    acc_attrs = list(rels[0].attrs) + ["__cell__"]
+    acc_valid = acc[:, -1] != INVALID
+    overflow = jnp.int32(0)
+    for rel in rels[1:]:
+        right = frags[rel.name]
+        right_attrs = list(rel.attrs) + ["__cell__"]
+        r_valid = right[:, -1] != INVALID
+        shared = [(acc_attrs.index(a), right_attrs.index(a))
+                  for a in right_attrs if a in acc_attrs]   # incl. __cell__
+        match = acc_valid[:, None] & r_valid[None, :]
+        for la, ra in shared:
+            match &= acc[:, la][:, None] == right[:, ra][None, :]
+        if use_kernels:
+            # Pallas reduce-phase counting on the logical-cell key (distinct
+            # sentinels so pads never match); an upper bound on the full
+            # multi-attribute match count, kept in the hot path as the
+            # kernel-integration point and a debugging cross-check.
+            pk = jnp.where(acc_valid, acc[:, -1], -2)
+            bk = jnp.where(r_valid, right[:, -1], -1)
+            _cell_matches = kops.match_counts(pk, bk).sum()
+        n_match = match.sum()
+        overflow = overflow + jnp.maximum(0, n_match - cap_out)
+        flat = jnp.nonzero(match.reshape(-1), size=cap_out, fill_value=0)[0]
+        li, ri = flat // right.shape[0], flat % right.shape[0]
+        extra_names = [a for a in rel.attrs if a not in acc_attrs]
+        extra_cols = [right_attrs.index(a) for a in extra_names]
+        # Column layout: acc named attrs, new named attrs, __cell__ last.
+        pieces = [acc[li][:, :-1]]
+        if extra_cols:
+            pieces.append(right[ri][:, jnp.asarray(extra_cols)])
+        pieces.append(acc[li][:, -1:])             # the (equal) cell id
+        new_rows = jnp.concatenate(pieces, axis=1)
+        acc_valid = jnp.arange(cap_out) < n_match
+        acc = jnp.where(acc_valid[:, None], new_rows, INVALID)
+        acc_attrs = acc_attrs[:-1] + extra_names + ["__cell__"]
+    order = [acc_attrs.index(a) for a in query.attributes]
+    return acc[:, jnp.asarray(order)], acc_valid, overflow
+
+
+class ShardedJoinExecutor:
+    """Runs a SkewJoinPlan on a 1-D mesh whose size equals plan.k."""
+
+    def __init__(self, plan: SkewJoinPlan, mesh: Mesh, axis: str = "cells",
+                 config: ExecutorConfig = ExecutorConfig()):
+        if mesh.shape[axis] != plan.k:
+            raise ValueError(
+                f"plan.k={plan.k} must equal mesh axis '{axis}' size "
+                f"{mesh.shape[axis]} (production folds logical cells per device)")
+        self.plan, self.mesh, self.axis, self.config = plan, mesh, axis, config
+        self.routes = _build_routes(plan)
+        self._caps: dict[str, int] = {}
+
+    # -- control plane ------------------------------------------------------
+    def _shard(self, arr: np.ndarray) -> np.ndarray:
+        """Pad rows to a device-divisible count with INVALID rows."""
+        k = self.plan.k
+        n = len(arr)
+        n_pad = -n % k
+        pad = np.full((n_pad, arr.shape[1]), INVALID, arr.dtype)
+        return np.concatenate([arr, pad]).astype(np.int32)
+
+    def _capacity(self, rel_name: str, data: Mapping[str, np.ndarray]) -> int:
+        """Static per-(src device, dest) bucket capacity from the plan's own
+        routing — the Shares guarantee makes this small; slack covers hashing
+        variance."""
+        k = self.plan.k
+        sharded = self._shard(np.asarray(data[rel_name]))
+        per_dev = sharded.reshape(k, -1, sharded.shape[1])
+        worst = 1
+        for d in range(k):
+            rows = per_dev[d]
+            rows = rows[rows[:, 0] != INVALID]
+            if len(rows) == 0:
+                continue
+            _, dest = self.plan.route_relation(rel_name, rows)
+            if len(dest):
+                worst = max(worst, int(np.bincount(dest, minlength=k).max()))
+        return int(np.ceil(worst * self.config.capacity_factor))
+
+    # -- data plane ----------------------------------------------------------
+    def run(self, data: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
+        """Execute the plan; returns {'rows', 'valid', 'shuffle_overflow',
+        'join_overflow', 'recv_counts'} gathered to host."""
+        k = self.plan.k
+        query = self.plan.query
+        cfg = self.config
+        if not self.plan.residuals:
+            # Provably empty join (some relation contributes zero tuples).
+            w = len(query.attributes)
+            return {"rows": np.zeros((0, w), np.int32),
+                    "valid": np.zeros((0,), bool),
+                    "shuffle_overflow": np.zeros(k, np.int64),
+                    "join_overflow": np.zeros(k, np.int64),
+                    "recv_counts": np.zeros(k, np.int64)}
+        caps = {r.name: self._capacity(r.name, data) for r in query.relations}
+        self._caps = caps
+        sharded = {r.name: self._shard(np.asarray(data[r.name]))
+                   for r in query.relations}
+        routes = self.routes
+
+        def step(*arrs):
+            local = {r.name: a for r, a in zip(query.relations, arrs)}
+            frags, sh_over = {}, jnp.int32(0)
+            recv_count = jnp.int32(0)
+            for rel in query.relations:
+                dests, rowss = [], []
+                for route in routes[rel.name]:
+                    d, rr = _route_rows(local[rel.name], route, cfg.use_kernels)
+                    dests.append(d)
+                    rowss.append(rr)
+                dest = jnp.concatenate(dests)
+                rows = jnp.concatenate(rowss)
+                buf, over = _pack_buckets(dest, rows, k, caps[rel.name])
+                sh_over = sh_over + over
+                recv = jax.lax.all_to_all(buf, self.axis, split_axis=0,
+                                          concat_axis=0, tiled=True)
+                frag = recv.reshape(-1, recv.shape[-1])
+                recv_count = recv_count + (frag[:, -1] != INVALID).sum()
+                frags[rel.name] = frag
+            out, valid, j_over = _local_join(frags, query, cfg.out_capacity,
+                                             cfg.use_kernels)
+            return (out[None], valid[None], sh_over[None], j_over[None],
+                    recv_count[None])
+
+        specs_in = tuple(P(self.axis) for _ in query.relations)
+        specs_out = (P(self.axis), P(self.axis), P(self.axis), P(self.axis),
+                     P(self.axis))
+        f = jax.shard_map(step, mesh=self.mesh, in_specs=specs_in,
+                          out_specs=specs_out, check_vma=False)
+        args = [jnp.asarray(sharded[r.name]) for r in query.relations]
+        out, valid, sh_over, j_over, recv = jax.jit(f)(*args)
+        return {
+            "rows": np.asarray(out).reshape(-1, out.shape[-1]),
+            "valid": np.asarray(valid).reshape(-1),
+            "shuffle_overflow": np.asarray(sh_over),
+            "join_overflow": np.asarray(j_over),
+            "recv_counts": np.asarray(recv),
+        }
+
+    def result_rows(self, data: Mapping[str, np.ndarray]) -> np.ndarray:
+        res = self.run(data)
+        if res["shuffle_overflow"].sum() or res["join_overflow"].sum():
+            raise RuntimeError(
+                f"capacity overflow: shuffle={res['shuffle_overflow'].sum()} "
+                f"join={res['join_overflow'].sum()}; raise capacity_factor/"
+                f"out_capacity")
+        return res["rows"][res["valid"]]

@@ -1,0 +1,123 @@
+"""Heavy-hitter detection (paper §1, §3).
+
+A value b of join attribute X is a heavy hitter (HH) when its frequency in some
+relation containing X is at least `threshold_frac` of that relation's size —
+frequent enough that a single reducer handling all of b's tuples would be
+overloaded.  The default fraction 1/k mirrors the systems the paper cites
+(Pig/Hive identify values exceeding a per-reducer quota).
+
+Two detectors:
+  * `exact_heavy_hitters`   — full histogram (numpy), used by the planner.
+  * `MisraGries`            — mergeable streaming sketch with the classical
+                              guarantee count_err ≤ N/m, used by the sharded
+                              data pipeline where a full pass is too expensive.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping
+
+import numpy as np
+
+from .plan import JoinQuery
+
+
+@dataclass(frozen=True)
+class HHSet:
+    """Heavy hitters per attribute: attr -> sorted tuple of HH values."""
+
+    per_attr: Mapping[str, tuple[int, ...]]
+
+    def attrs_with_hh(self) -> tuple[str, ...]:
+        return tuple(a for a, v in self.per_attr.items() if v)
+
+    def values(self, attr: str) -> tuple[int, ...]:
+        return self.per_attr.get(attr, ())
+
+    def total(self) -> int:
+        return sum(len(v) for v in self.per_attr.values())
+
+
+def exact_heavy_hitters(
+    data: Mapping[str, np.ndarray],
+    query: JoinQuery,
+    k: int,
+    threshold_factor: float = 1.0,
+    max_hh_per_attr: int = 64,
+) -> HHSet:
+    """Exact HH detection over column-store data.
+
+    `data[rel]` is an (n_tuples, arity) int array matching `rel.attrs` order.
+    A value is a HH for attribute X if, in some relation R containing X, its
+    count ≥ threshold_factor · |R| / k.  At most `max_hh_per_attr` heaviest
+    values are kept per attribute (residual-join count is exponential in HH
+    count per *co-skewed* attribute; the tail is rarely worth a residual).
+    """
+    out: dict[str, tuple[int, ...]] = {}
+    for attr in query.join_attributes():
+        counts: dict[int, int] = {}
+        for rel in query.relations_with(attr):
+            arr = data[rel.name]
+            if arr.size == 0:
+                continue
+            col = arr[:, rel.attrs.index(attr)]
+            thresh = max(1.0, threshold_factor * len(col) / k)
+            vals, cnts = np.unique(col, return_counts=True)
+            for v, c in zip(vals[cnts >= thresh], cnts[cnts >= thresh]):
+                counts[int(v)] = max(counts.get(int(v), 0), int(c))
+        hh = sorted(counts, key=lambda v: (-counts[v], v))[:max_hh_per_attr]
+        out[attr] = tuple(sorted(hh))
+    return HHSet(out)
+
+
+@dataclass
+class MisraGries:
+    """Misra–Gries frequent-items sketch with m counters.
+
+    Guarantee: for every value v, true_count - N/m ≤ estimate(v) ≤ true_count,
+    where N is the stream length.  Sketches over disjoint shards merge by
+    summing counters then decrementing back down to m survivors, preserving the
+    guarantee with N = Σ N_shard.
+    """
+
+    m: int
+    counters: dict[int, int] = field(default_factory=dict)
+    n_seen: int = 0
+
+    def update(self, xs: Iterable[int]) -> None:
+        for x in np.asarray(list(xs)).ravel():
+            x = int(x)
+            self.n_seen += 1
+            if x in self.counters:
+                self.counters[x] += 1
+            elif len(self.counters) < self.m:
+                self.counters[x] = 1
+            else:
+                dead = []
+                for key in self.counters:
+                    self.counters[key] -= 1
+                    if self.counters[key] == 0:
+                        dead.append(key)
+                for key in dead:
+                    del self.counters[key]
+
+    def estimate(self, x: int) -> int:
+        return self.counters.get(int(x), 0)
+
+    def merge(self, other: "MisraGries") -> "MisraGries":
+        merged = MisraGries(self.m)
+        merged.n_seen = self.n_seen + other.n_seen
+        cs = dict(self.counters)
+        for v, c in other.counters.items():
+            cs[v] = cs.get(v, 0) + c
+        if len(cs) > self.m:
+            # Decrement all by the (len-m)-th largest count to keep ≤ m survivors.
+            cut = sorted(cs.values(), reverse=True)[self.m]
+            cs = {v: c - cut for v, c in cs.items() if c - cut > 0}
+        merged.counters = cs
+        return merged
+
+    def heavy_hitters(self, n_total: int, frac: float) -> tuple[int, ...]:
+        """Values that MAY exceed frac·n_total (no false negatives)."""
+        floor = frac * n_total - n_total / self.m
+        return tuple(sorted(v for v, c in self.counters.items() if c > floor))

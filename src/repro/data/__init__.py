@@ -1,0 +1,6 @@
+"""repro.data — data pipeline: synthetic skewed relations + tokenized LM batches."""
+from .synthetic import zipf_column, skewed_relation, skewed_join_dataset
+from .pipeline import TokenPipeline, PipelineConfig
+
+__all__ = ["zipf_column", "skewed_relation", "skewed_join_dataset",
+           "TokenPipeline", "PipelineConfig"]

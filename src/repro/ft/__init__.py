@@ -1,0 +1,7 @@
+"""repro.ft — fault tolerance: health, stragglers, elastic re-meshing."""
+from .health import HealthMonitor, NodeState
+from .straggler import StragglerWatchdog
+from .elastic import elastic_remesh, survivors_mesh
+
+__all__ = ["HealthMonitor", "NodeState", "StragglerWatchdog",
+           "elastic_remesh", "survivors_mesh"]

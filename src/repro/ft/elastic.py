@@ -1,0 +1,43 @@
+"""Elastic re-meshing: rebuild the mesh from surviving devices and reshard.
+
+Failure response path (exercised end-to-end in tests/test_ft.py on virtual
+devices):
+  1. HealthMonitor reports failed nodes;
+  2. `survivors_mesh` builds the largest power-of-two DP mesh from surviving
+     devices (model axis preserved — TP groups are intra-node on v5e, so a
+     node loss removes whole DP rows);
+  3. `elastic_remesh` restores the latest checkpoint onto the new mesh via the
+     resharding restore (ckpt/checkpoint.py), and the caller rebuilds its step
+     functions with the new mesh + same Rules.
+Global batch is preserved by scaling microbatch accumulation (train driver).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from ..ckpt.checkpoint import Checkpointer
+
+
+def survivors_mesh(mesh, failed_dp_rows: list[int]):
+    """New mesh without the failed data-parallel rows (power-of-two trimmed)."""
+    axes = list(mesh.axis_names)
+    devs = np.asarray(mesh.devices)
+    dp_axis = axes.index("data")
+    keep = [i for i in range(devs.shape[dp_axis]) if i not in failed_dp_rows]
+    # Largest power of two ≤ survivors keeps shardings divisible.
+    n = 1
+    while n * 2 <= len(keep):
+        n *= 2
+    keep = keep[:n]
+    new_devs = np.take(devs, keep, axis=dp_axis)
+    from jax.sharding import Mesh
+    return Mesh(new_devs, axis_names=mesh.axis_names)
+
+
+def elastic_remesh(ckptr: Checkpointer, tree_abstract, new_shardings):
+    """Restore the latest committed checkpoint onto the new mesh."""
+    step = ckptr.latest_step()
+    if step is None:
+        raise RuntimeError("no committed checkpoint to restore from")
+    return step, ckptr.restore(step, tree_abstract, new_shardings)

@@ -1,0 +1,57 @@
+"""Node health tracking: heartbeats + failure detection.
+
+On a real cluster the heartbeat transport is the coordination service (GCS /
+etcd / jax.distributed's coordinator); here it's injectable, which is also how
+tests simulate failures.  The trainer polls `failed_nodes()` between steps —
+detection is out-of-band, response (elastic re-mesh + checkpoint restore) is
+in `ft/elastic.py` and `launch/train.py`.
+"""
+from __future__ import annotations
+
+import enum
+import time
+from dataclasses import dataclass, field
+
+
+class NodeState(enum.Enum):
+    HEALTHY = "healthy"
+    SUSPECT = "suspect"
+    FAILED = "failed"
+
+
+@dataclass
+class HealthMonitor:
+    n_nodes: int
+    heartbeat_timeout_s: float = 30.0
+    suspect_timeout_s: float = 10.0
+    clock: callable = time.monotonic
+    _last_beat: dict[int, float] = field(default_factory=dict)
+    _forced_failures: set[int] = field(default_factory=set)
+
+    def __post_init__(self):
+        now = self.clock()
+        self._last_beat = {i: now for i in range(self.n_nodes)}
+
+    def heartbeat(self, node: int) -> None:
+        if node not in self._forced_failures:
+            self._last_beat[node] = self.clock()
+
+    def inject_failure(self, node: int) -> None:
+        """Test hook: node stops heartbeating permanently."""
+        self._forced_failures.add(node)
+
+    def state(self, node: int) -> NodeState:
+        age = self.clock() - self._last_beat[node]
+        if age > self.heartbeat_timeout_s:
+            return NodeState.FAILED
+        if age > self.suspect_timeout_s:
+            return NodeState.SUSPECT
+        return NodeState.HEALTHY
+
+    def failed_nodes(self) -> list[int]:
+        return [i for i in range(self.n_nodes)
+                if self.state(i) == NodeState.FAILED]
+
+    def healthy_nodes(self) -> list[int]:
+        return [i for i in range(self.n_nodes)
+                if self.state(i) == NodeState.HEALTHY]

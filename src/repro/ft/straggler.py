@@ -1,0 +1,55 @@
+"""Straggler detection + mitigation policy.
+
+Tracks per-node step times (EMA); a node is a straggler when its EMA exceeds
+`threshold` × the fleet median.  Mitigations escalate:
+  1. rebalance  — shrink the straggler's data shard (returned weights feed the
+                  data pipeline's shard sizing);
+  2. replan-moe — for MoE runs, hot experts make their owners stragglers by
+                  construction; the trainer re-runs core.moe_shares.plan_dispatch
+                  with observed loads (the paper's fix, not a workaround);
+  3. evict      — persistent stragglers get reported to HealthMonitor as failed
+                  (handled by the elastic path).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class StragglerWatchdog:
+    n_nodes: int
+    threshold: float = 1.5
+    ema: float = 0.7
+    evict_after: int = 5
+    _t: np.ndarray = field(default=None)
+    _strikes: np.ndarray = field(default=None)
+
+    def __post_init__(self):
+        self._t = np.zeros(self.n_nodes)
+        self._strikes = np.zeros(self.n_nodes, dtype=int)
+
+    def record_step(self, times_s: np.ndarray) -> None:
+        times_s = np.asarray(times_s, dtype=float)
+        self._t = np.where(self._t == 0, times_s,
+                           self.ema * self._t + (1 - self.ema) * times_s)
+        med = np.median(self._t[self._t > 0])
+        slow = self._t > self.threshold * med
+        self._strikes = np.where(slow, self._strikes + 1, 0)
+
+    def stragglers(self) -> list[int]:
+        med = np.median(self._t[self._t > 0]) if (self._t > 0).any() else 0
+        return [i for i in range(self.n_nodes)
+                if med and self._t[i] > self.threshold * med]
+
+    def to_evict(self) -> list[int]:
+        return [i for i in range(self.n_nodes)
+                if self._strikes[i] >= self.evict_after]
+
+    def shard_weights(self) -> np.ndarray:
+        """Per-node data-shard weights ∝ 1/step-time (rebalance mitigation)."""
+        if not (self._t > 0).all():
+            return np.full(self.n_nodes, 1.0 / self.n_nodes)
+        w = 1.0 / self._t
+        return w / w.sum()

@@ -1,0 +1,111 @@
+"""Pallas kernels: blocked build/probe join primitives (reduce-phase hot spot).
+
+A reducer cell's local join compares its probe-side keys against its build-side
+keys.  On TPU the natural shape is a block-nested-loop over VMEM tiles: the
+grid is (probe_blocks, build_blocks); each step loads a (pb,) probe tile and a
+(bb,) build tile, forms the (pb, bb) equality tile on the VPU, and accumulates
+per-probe statistics.  TPU grids iterate the minor axis innermost and
+sequentially, so revisiting the same output tile across build blocks is a safe
+read-modify-write accumulation.
+
+Two primitives:
+  * match_counts(probe, build)  — #build matches per probe row (join sizing /
+                                  expansion offsets).
+  * first_match(probe, build)   — index of first match or -1 (semi-join and
+                                  dedup filters).
+
+Pair *expansion* (emitting the matched index lists) is deliberately left to
+XLA sort/cumsum — scatter-heavy code is not where TPUs win; sizing + gather is.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_PROBE_BLOCK = 512
+DEFAULT_BUILD_BLOCK = 512
+_INT_MAX = 2**31 - 1
+
+
+def _match_counts_kernel(probe_ref, build_ref, out_ref):
+    eq = probe_ref[...][:, None] == build_ref[...][None, :]    # (pb, bb)
+    partial = eq.astype(jnp.int32).sum(axis=1)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+def _first_match_kernel(probe_ref, build_ref, out_ref, *, build_block: int):
+    j = pl.program_id(1)
+    eq = probe_ref[...][:, None] == build_ref[...][None, :]    # (pb, bb)
+    col = jax.lax.broadcasted_iota(jnp.int32, eq.shape, 1) + j * build_block
+    idx = jnp.where(eq, col, jnp.int32(_INT_MAX)).min(axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, jnp.int32(_INT_MAX))
+
+    out_ref[...] = jnp.minimum(out_ref[...], idx)
+
+
+def _pad(x: jnp.ndarray, block: int, fill: int) -> jnp.ndarray:
+    return jnp.pad(x, (0, -x.shape[0] % block), constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("probe_block", "build_block", "interpret"))
+def match_counts(probe: jnp.ndarray, build: jnp.ndarray, *,
+                 probe_block: int = DEFAULT_PROBE_BLOCK,
+                 build_block: int = DEFAULT_BUILD_BLOCK,
+                 interpret: bool = False) -> jnp.ndarray:
+    """counts[i] = |{j : probe[i] == build[j]}|, int32 (n_probe,).
+
+    Callers must ensure padding sentinels on the two sides differ (the executor
+    uses -1 for build pads and -2 for probe pads), which this wrapper enforces.
+    """
+    n = probe.shape[0]
+    probe_p = _pad(probe.astype(jnp.int32), probe_block, -2)
+    build_p = _pad(build.astype(jnp.int32), build_block, -1)
+    grid = (probe_p.shape[0] // probe_block, build_p.shape[0] // build_block)
+    out = pl.pallas_call(
+        _match_counts_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((probe_block,), lambda i, j: (i,)),
+            pl.BlockSpec((build_block,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((probe_block,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((probe_p.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(probe_p, build_p)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("probe_block", "build_block", "interpret"))
+def first_match(probe: jnp.ndarray, build: jnp.ndarray, *,
+                probe_block: int = DEFAULT_PROBE_BLOCK,
+                build_block: int = DEFAULT_BUILD_BLOCK,
+                interpret: bool = False) -> jnp.ndarray:
+    """Index in `build` of the first match per probe row, or -1, int32."""
+    n = probe.shape[0]
+    probe_p = _pad(probe.astype(jnp.int32), probe_block, -2)
+    build_p = _pad(build.astype(jnp.int32), build_block, -1)
+    grid = (probe_p.shape[0] // probe_block, build_p.shape[0] // build_block)
+    out = pl.pallas_call(
+        functools.partial(_first_match_kernel, build_block=build_block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((probe_block,), lambda i, j: (i,)),
+            pl.BlockSpec((build_block,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((probe_block,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((probe_p.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(probe_p, build_p)
+    out = out[:n]
+    return jnp.where(out == _INT_MAX, jnp.int32(-1), out)

@@ -1,0 +1,87 @@
+"""Pallas kernel: multiply-shift hash partitioning + bucket histogram.
+
+The map-phase hot spot of the SkewShares executor (paper §2's hash functions
+h_i): every tuple's key is hashed to a power-of-two bucket, and the per-bucket
+histogram is produced in the same pass (the shuffle needs it for capacity
+planning, and HH detection reads it directly).
+
+TPU mapping: keys stream HBM -> VMEM in (8, 128)-aligned tiles; the histogram
+is a VMEM accumulator revisited by every grid step (TPU grids are sequential,
+so read-modify-write accumulation across steps is safe).  Bucket comparison is
+a (block, nbuckets) one-hot on the VPU — nbuckets ≤ 2^14 keeps the one-hot tile
+within VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MULT
+
+# Rows per grid step; lane-aligned (8 sublanes × 128 lanes).
+DEFAULT_BLOCK = 1024
+
+
+def _hash_partition_kernel(keys_ref, ids_ref, hist_ref, *, seed: int,
+                           nbuckets: int, shift: int):
+    keys = keys_ref[...]                              # (block,)
+    if nbuckets == 1:
+        ids = jnp.zeros(keys.shape, jnp.int32)
+    else:
+        h = (keys.astype(jnp.uint32) * jnp.uint32(seed)) * jnp.uint32(MULT)
+        ids = (h >> jnp.uint32(shift)).astype(jnp.int32)
+    ids_ref[...] = ids
+
+    # One-hot histogram for this block; 2-D iota (TPU requires ≥2D iota).
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (keys.shape[0], nbuckets), 1)
+    onehot = (ids[:, None] == buckets).astype(jnp.int32)
+    partial = onehot.sum(axis=0)                      # (nbuckets,)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "nbuckets", "block", "interpret"))
+def hash_partition(keys: jnp.ndarray, *, seed: int, nbuckets: int,
+                   block: int = DEFAULT_BLOCK, interpret: bool = False
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(bucket_ids int32 (n,), histogram int32 (nbuckets,)) for int keys.
+
+    n is padded to a multiple of `block` internally; pad keys hash to some
+    bucket but are excluded from the histogram by masking them to bucket -1.
+    """
+    if nbuckets & (nbuckets - 1):
+        raise ValueError(f"nbuckets={nbuckets} must be a power of two")
+    n = keys.shape[0]
+    n_pad = -n % block
+    keys_p = jnp.pad(keys, (0, n_pad), constant_values=0)
+    shift = 32 - max(nbuckets.bit_length() - 1, 1)
+
+    grid = (keys_p.shape[0] // block,)
+    ids, hist = pl.pallas_call(
+        functools.partial(_hash_partition_kernel, seed=seed,
+                          nbuckets=nbuckets, shift=shift),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((nbuckets,), lambda i: (0,)),   # same block every step
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((keys_p.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((nbuckets,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys_p)
+    ids = ids[:n]
+    if n_pad:
+        # Padded keys are 0 and hash(0) = 0 -> they all land in bucket 0;
+        # subtract their histogram contribution.
+        hist = hist.at[0].add(-n_pad)
+    return ids, hist

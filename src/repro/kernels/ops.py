@@ -1,0 +1,53 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else (this CPU container, unit
+tests) they run in interpret mode, which executes the kernel body in Python
+with identical semantics.  `INTERPRET` may be forced via REPRO_PALLAS_INTERPRET.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import build_probe, hash_partition as _hp, route_cells as _rc, segment_histogram as _sh
+
+INTERPRET = (os.environ.get("REPRO_PALLAS_INTERPRET", "") == "1"
+             or jax.default_backend() != "tpu")
+
+
+def hash_partition(keys: jnp.ndarray, seed: int, nbuckets: int,
+                   block: int = _hp.DEFAULT_BLOCK):
+    """(bucket_ids, histogram) — see kernels/hash_partition.py."""
+    return _hp.hash_partition(keys, seed=seed, nbuckets=nbuckets, block=block,
+                              interpret=INTERPRET)
+
+
+def match_counts(probe: jnp.ndarray, build: jnp.ndarray,
+                 probe_block: int = build_probe.DEFAULT_PROBE_BLOCK,
+                 build_block: int = build_probe.DEFAULT_BUILD_BLOCK):
+    """Per-probe match counts — see kernels/build_probe.py."""
+    return build_probe.match_counts(probe, build, probe_block=probe_block,
+                                    build_block=build_block, interpret=INTERPRET)
+
+
+def first_match(probe: jnp.ndarray, build: jnp.ndarray,
+                probe_block: int = build_probe.DEFAULT_PROBE_BLOCK,
+                build_block: int = build_probe.DEFAULT_BUILD_BLOCK):
+    """First matching build index per probe (or -1) — see kernels/build_probe.py."""
+    return build_probe.first_match(probe, build, probe_block=probe_block,
+                                   build_block=build_block, interpret=INTERPRET)
+
+
+def segment_histogram(values: jnp.ndarray, n_bins: int,
+                      block: int = _sh.DEFAULT_BLOCK):
+    """Bounded-domain histogram — see kernels/segment_histogram.py."""
+    return _sh.segment_histogram(values, n_bins=n_bins, block=block,
+                                 interpret=INTERPRET)
+
+
+def route_cells(rows, recipe, block: int = _rc.DEFAULT_BLOCK):
+    """Fused map-phase routing — see kernels/route_cells.py."""
+    return _rc.route_cells(rows, recipe=recipe, block=block,
+                           interpret=INTERPRET)

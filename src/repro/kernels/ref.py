@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `<name>_ref` is the semantic ground truth the kernels are tested against
+(interpret mode on CPU, compiled on TPU).  Keep these dead simple — no
+blocking, no tricks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Knuth's multiplicative constant — must match core.hypercube._MULT.
+MULT = 2654435769
+
+
+def hash_partition_ref(keys: jnp.ndarray, seed: int, nbuckets: int
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Multiply-shift hash to power-of-two buckets + bucket histogram.
+
+    h(v) = top log2(nbuckets) bits of (v · seed · MULT) over uint32.
+    Returns (bucket_ids int32 (n,), histogram int32 (nbuckets,)).
+    """
+    assert nbuckets & (nbuckets - 1) == 0, "nbuckets must be a power of two"
+    if nbuckets == 1:
+        ids = jnp.zeros(keys.shape, jnp.int32)
+    else:
+        b = nbuckets.bit_length() - 1
+        h = (keys.astype(jnp.uint32) * jnp.uint32(seed)) * jnp.uint32(MULT)
+        ids = (h >> jnp.uint32(32 - b)).astype(jnp.int32)
+    hist = jnp.zeros((nbuckets,), jnp.int32).at[ids].add(1)
+    return ids, hist
+
+
+def match_counts_ref(probe: jnp.ndarray, build: jnp.ndarray) -> jnp.ndarray:
+    """counts[i] = |{j : probe[i] == build[j]}|  (int32 (n_probe,))."""
+    return (probe[:, None] == build[None, :]).sum(axis=1).astype(jnp.int32)
+
+
+def first_match_ref(probe: jnp.ndarray, build: jnp.ndarray) -> jnp.ndarray:
+    """Index of the first matching build row per probe, or -1 (int32)."""
+    eq = probe[:, None] == build[None, :]
+    idx = jnp.where(eq, jnp.arange(build.shape[0], dtype=jnp.int32)[None, :],
+                    jnp.int32(2**31 - 1))
+    m = idx.min(axis=1)
+    return jnp.where(m == 2**31 - 1, jnp.int32(-1), m)
+
+
+def segment_histogram_ref(values: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """Frequency histogram of int values in [0, n_bins) (int32 (n_bins,)).
+
+    The heavy-hitter counting pass: values outside the range are dropped.
+    """
+    valid = (values >= 0) & (values < n_bins)
+    clipped = jnp.clip(values, 0, n_bins - 1)
+    return jnp.zeros((n_bins,), jnp.int32).at[clipped].add(
+        valid.astype(jnp.int32))
+
+
+def route_cells_ref(rows: jnp.ndarray,
+                    recipe: tuple[tuple[int, int, int, int], ...]
+                    ) -> jnp.ndarray:
+    """Fused hypercube routing oracle: Σ_i h_i(row[col_i]) · stride_i."""
+    cell = jnp.zeros((rows.shape[0],), jnp.int32)
+    for col, seed, share, stride in recipe:
+        if share == 1:
+            continue
+        ids, _ = hash_partition_ref(rows[:, col], seed, share)
+        cell = cell + ids * stride
+    return cell

@@ -1,0 +1,68 @@
+"""Pallas kernel: fused hypercube routing (the map phase in one pass).
+
+For each tuple row, the Shares router computes
+    cell = Σ_i  h_{seed_i}(row[col_i]) mod share_i · stride_i
+over the relation's hashed attributes (paper §2's h_i family).  Composing
+per-attribute `hash_partition` calls costs one HBM round trip per attribute;
+this kernel fuses hash + mod + mixed-radix combine for ALL attributes in a
+single VMEM pass over the rows.
+
+The (col, seed, share, stride) recipe is static (from the SkewJoinPlan), so it
+compiles into the kernel body — shares are powers of two, so `mod` is a shift.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MULT
+
+DEFAULT_BLOCK = 1024
+
+
+def _route_cells_kernel(rows_ref, out_ref, *, recipe, width):
+    rows = rows_ref[...]                                  # (block, width)
+    cell = jnp.zeros((rows.shape[0],), jnp.int32)
+    for col, seed, share, stride in recipe:
+        if share == 1:
+            continue
+        b = share.bit_length() - 1
+        h = (rows[:, col].astype(jnp.uint32) * jnp.uint32(seed)) \
+            * jnp.uint32(MULT)
+        ids = (h >> jnp.uint32(32 - b)).astype(jnp.int32)
+        cell = cell + ids * stride
+    out_ref[...] = cell
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("recipe", "block", "interpret"))
+def route_cells(rows: jnp.ndarray, *,
+                recipe: tuple[tuple[int, int, int, int], ...],
+                block: int = DEFAULT_BLOCK,
+                interpret: bool = False) -> jnp.ndarray:
+    """Base cell id per row (int32 (n,)).
+
+    rows: (n, width) int32; recipe: static ((col, seed, share, stride), ...)
+    with power-of-two shares.  Replication offsets and membership masks are
+    the caller's concern (core.executor adds them) — this kernel is the pure
+    hash/combine hot loop.
+    """
+    for col, seed, share, stride in recipe:
+        if share & (share - 1):
+            raise ValueError(f"share {share} not a power of two")
+    n, width = rows.shape
+    n_pad = -n % block
+    rows_p = jnp.pad(rows, ((0, n_pad), (0, 0)))
+    grid = (rows_p.shape[0] // block,)
+    out = pl.pallas_call(
+        functools.partial(_route_cells_kernel, recipe=recipe, width=width),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, width), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows_p.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(rows_p)
+    return out[:n]

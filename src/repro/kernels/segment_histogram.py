@@ -1,0 +1,54 @@
+"""Pallas kernel: bounded-domain frequency histogram (HH counting pass).
+
+Exact heavy-hitter detection over a bounded key domain (e.g. expert ids in MoE
+routing, bucketed join keys): one streaming pass, histogram accumulated in
+VMEM.  Values outside [0, n_bins) (padding, tombstones) are dropped.
+
+This is the on-device companion of `core.heavy_hitters.exact_heavy_hitters`
+and feeds the MoE SkewShares planner with per-expert loads every step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _segment_histogram_kernel(vals_ref, hist_ref, *, n_bins: int):
+    vals = vals_ref[...]                                  # (block,)
+    valid = (vals >= 0) & (vals < n_bins)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (vals.shape[0], n_bins), 1)
+    onehot = ((vals[:, None] == bins) & valid[:, None]).astype(jnp.int32)
+    partial = onehot.sum(axis=0)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "block", "interpret"))
+def segment_histogram(values: jnp.ndarray, *, n_bins: int,
+                      block: int = DEFAULT_BLOCK,
+                      interpret: bool = False) -> jnp.ndarray:
+    """int32 (n_bins,) histogram of `values` restricted to [0, n_bins)."""
+    v = _flatten_pad(values, block)
+    grid = (v.shape[0] // block,)
+    return pl.pallas_call(
+        functools.partial(_segment_histogram_kernel, n_bins=n_bins),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((n_bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_bins,), jnp.int32),
+        interpret=interpret,
+    )(v)
+
+
+def _flatten_pad(values: jnp.ndarray, block: int) -> jnp.ndarray:
+    v = values.reshape(-1).astype(jnp.int32)
+    return jnp.pad(v, (0, -v.shape[0] % block), constant_values=-1)

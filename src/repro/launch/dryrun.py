@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY other import: jax locks the device
+# count at first init, and the production dry-run needs 512 placeholder
+# devices.  This flag is set HERE and only here — tests and benches see the
+# real device count.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the REAL step function (train_step / prefill /
+decode_step — the same builders the trainer and server use), lowers it against
+ShapeDtypeStruct inputs (zero allocation), compiles for the production mesh,
+and records:
+
+  * compiled.memory_analysis()  — per-device bytes (does it fit 16 GB HBM?)
+  * compiled.cost_analysis()    — XLA's FLOPs/bytes (scan-undercounted; kept
+                                  for reference)
+  * launch.hlo_analysis.analyze — trip-count-corrected FLOPs / HBM bytes /
+                                  collective bytes (the §Roofline terms)
+  * analytic MODEL_FLOPS (6·N_active·D train, 2·N_active·D inference) and the
+    useful-compute ratio.
+
+Results append to a JSON file (resume-safe); EXPERIMENTS.md §Dry-run/§Roofline
+are generated from it.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, cell_applicable, get, input_specs
+from ..models import api
+from ..models.common import count_params, default_rules
+from ..optim import AdamWConfig
+from . import mesh as meshlib
+from . import hlo_analysis
+
+
+def active_params(cfg) -> float:
+    """Per-token active parameter count (MoE counts topk experts once)."""
+    total = count_params(api.layout(cfg))
+    # subtract embedding + unembedding (not matmul-per-token in the 6ND sense;
+    # the logits matmul is added explicitly below)
+    emb = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "moe":
+        n_slots = cfg.n_slots()
+        expert_p = 3 * cfg.d_model * cfg.d_ff * n_slots * cfg.n_layers
+        dense_p = total - emb - expert_p
+        active_expert = 3 * cfg.d_model * cfg.d_ff * cfg.topk * cfg.n_layers
+        return dense_p + active_expert
+    return total - emb
+
+
+def model_flops(cfg, shape: str) -> float:
+    """Analytic useful FLOPs per step (global, all chips)."""
+    cell = SHAPES[shape]
+    n_act = active_params(cfg)
+    logits_flops_per_tok = 2 * cfg.d_model * cfg.vocab
+    if cell.kind == "train":
+        toks = cell.global_batch * cell.seq_len
+        return 6 * n_act * toks + 3 * logits_flops_per_tok * toks
+    if cell.kind == "prefill":
+        toks = cell.global_batch * cell.seq_len
+        return 2 * n_act * toks + logits_flops_per_tok * toks
+    # decode: one token per sequence (attention reads of the KV cache are
+    # memory-, not FLOP-dominated; 2·N covers the matmuls)
+    return (2 * n_act + logits_flops_per_tok) * cell.global_batch
+
+
+def build_lowered(cfg, shape: str, mesh, rules, n_micro: int = 1,
+                  opt_bits: int = 32):
+    """Lower the right step function for this cell; returns jax.stages.Lowered."""
+    cell = SHAPES[shape]
+    specs = input_specs(cfg, shape)
+    if cell.kind == "train":
+        from ..train import build_train_step
+        fns = build_train_step(cfg, mesh, specs, rules=rules, n_micro=n_micro,
+                               opt_cfg=AdamWConfig(state_bits=opt_bits))
+        return fns.step.lower(fns.params_abstract, fns.opt_abstract, specs)
+    if cell.kind == "prefill":
+        from ..serve import build_prefill
+        fns = build_prefill(cfg, mesh, specs, rules=rules)
+        return fns.prefill.lower(fns.params_abstract, specs)
+    from ..serve import build_decode_step
+    fns = build_decode_step(cfg, mesh, batch=cell.global_batch,
+                            max_seq=cell.seq_len, rules=rules)
+    return fns.decode.lower(fns.params_abstract, fns.cache_abstract,
+                            specs["tokens"], specs["pos"])
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, rules_overrides=None,
+             n_micro: int | None = None, opt_bits: int | None = None,
+             cfg_overrides: dict | None = None) -> dict:
+    import dataclasses
+    cfg = get(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    cell = SHAPES[shape]
+    multi = mesh_kind == "multi"
+    chips = 512 if multi else 256
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "chips": chips,
+           "kind": cell.kind}
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    if n_micro is None:
+        # Deployable default: 1 sequence per device per microbatch — the
+        # activation-memory lever every production trainer uses at this scale.
+        dp = 32 if multi else 16
+        n_micro = max(1, cell.global_batch // dp) if cell.kind == "train" else 1
+    rec["n_micro"] = n_micro
+    if opt_bits is None:
+        # kimi-k2's 1T states need 8-bit moments to fit (DESIGN.md §7).
+        opt_bits = 8 if cfg.name.startswith("kimi") else 32
+    try:
+        mesh = meshlib.make_production_mesh(multi_pod=multi)
+        rules = default_rules(mesh)
+        if cfg.sharding_hints:
+            rules = rules.override(**dict(cfg.sharding_hints))
+        if rules_overrides:
+            rules = rules.override(**rules_overrides)
+        t0 = time.time()
+        lowered = build_lowered(cfg, shape, mesh, rules, n_micro, opt_bits)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        terms = hlo_analysis.analyze(txt, pod_size=256 if multi else None)
+        secs = terms.seconds(peak_flops=meshlib.PEAK_FLOPS_BF16,
+                             hbm_bw=meshlib.HBM_BW,
+                             ici_bw=meshlib.ICI_BW_PER_LINK)
+        mf = model_flops(cfg, shape)
+        ideal_compute_s = mf / chips / meshlib.PEAK_FLOPS_BF16
+        # Minimum-necessary HBM traffic: the program MUST read its arguments
+        # and write its outputs once (params+opt for train; params+cache for
+        # decode).  The binding roof is the larger of compute and that floor —
+        # decode steps are legitimately memory-bound, not "bad compute".
+        ideal_memory_s = (ma.argument_size_in_bytes
+                          + ma.output_size_in_bytes) / meshlib.HBM_BW
+        ideal_s = max(ideal_compute_s, ideal_memory_s)
+        bound_s = max(secs.values())
+        dominant = max(secs, key=secs.get)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            n_params=count_params(api.layout(cfg)),
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "total_per_device": ma.argument_size_in_bytes
+                + ma.temp_size_in_bytes,
+                "fits_16GB": (ma.argument_size_in_bytes
+                              + ma.temp_size_in_bytes) < 16e9,
+            },
+            xla_cost={"flops": ca.get("flops"),
+                      "bytes_accessed": ca.get("bytes accessed")},
+            parsed={
+                "flops": terms.flops,
+                "hbm_bytes": terms.hbm_bytes,
+                "coll_bytes": terms.coll_bytes,
+                "coll_bytes_total": terms.coll_bytes_total,
+                "coll_bytes_crosspod": terms.coll_bytes_crosspod,
+                "coll_counts": {k: v for k, v in terms.coll_counts.items() if v},
+            },
+            roofline={
+                "compute_s": secs["compute_s"],
+                "memory_s": secs["memory_s"],
+                "collective_s": secs["collective_s"],
+                "dominant": dominant,
+                "bound_s": bound_s,
+                "model_flops_global": mf,
+                "ideal_compute_s": ideal_compute_s,
+                "ideal_memory_s": ideal_memory_s,
+                "useful_flops_ratio": (mf / chips) / max(terms.flops, 1.0),
+                "roofline_fraction": ideal_s / max(bound_s, 1e-30),
+            },
+        )
+    except Exception as e:  # noqa: BLE001 — a failing cell is a finding
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default="results/dryrun.json")
+    p.add_argument("--n-micro", type=int, default=None)
+    p.add_argument("--opt-bits", type=int, default=None)
+    p.add_argument("--override", nargs="*", default=[],
+                   help="rules overrides, e.g. act_seq=model embed=None")
+    p.add_argument("--cfg-set", nargs="*", default=[],
+                   help="ArchConfig field overrides, e.g. moe_slot_factor=1.0")
+    p.add_argument("--tag", default=None, help="variant tag for §Perf records")
+    p.add_argument("--force", action="store_true", help="rerun existing cells")
+    args = p.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v in ("None", "none", ""):
+            overrides[k] = None
+        elif "," in v:
+            overrides[k] = tuple(v.split(","))
+        else:
+            overrides[k] = v
+    cfg_overrides = {}
+    for ov in args.cfg_set:
+        k, v = ov.split("=", 1)
+        try:
+            cfg_overrides[k] = int(v)
+        except ValueError:
+            try:
+                cfg_overrides[k] = float(v)
+            except ValueError:
+                cfg_overrides[k] = v
+
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    existing = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            existing = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("tag")) for r in existing}
+
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                key = (arch, shape, mk, args.tag)
+                if key in done and not args.force:
+                    continue
+                t0 = time.time()
+                rec = run_cell(arch, shape, mk, overrides, args.n_micro,
+                               opt_bits=args.opt_bits,
+                               cfg_overrides=cfg_overrides or None)
+                rec["tag"] = args.tag
+                if overrides:
+                    rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+                existing = [r for r in existing
+                            if (r["arch"], r["shape"], r["mesh"], r.get("tag")) != key]
+                existing.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(existing, f, indent=1)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    rl = rec["roofline"]
+                    extra = (f"dom={rl['dominant'][:-2]} "
+                             f"frac={rl['roofline_fraction']:.3f} "
+                             f"mem/dev={rec['memory']['total_per_device']/1e9:.1f}GB "
+                             f"compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(f"[{time.time()-t0:6.1f}s] {arch:22s} {shape:12s} "
+                      f"{mk:6s} {status:8s} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

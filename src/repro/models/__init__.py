@@ -1,0 +1,10 @@
+"""repro.models — pure-JAX model zoo (dense, MoE, SSM, hybrid, enc-dec, VLM)."""
+from . import api, common, encdec, hybrid, layers, moe, ssm, transformer, vlm
+from .common import (NO_SHARD, PDef, Rules, ShardCtx, abstract_params,
+                     count_params, default_rules, init_params, param_pspecs,
+                     param_shardings, resolve_pspec, stack_layers)
+
+__all__ = ["api", "common", "encdec", "hybrid", "layers", "moe", "ssm",
+           "transformer", "vlm", "NO_SHARD", "PDef", "Rules", "ShardCtx",
+           "abstract_params", "count_params", "default_rules", "init_params",
+           "param_pspecs", "param_shardings", "resolve_pspec", "stack_layers"]

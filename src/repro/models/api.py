@@ -1,0 +1,71 @@
+"""Unified model API over all families.
+
+Every entry point takes a `batch` dict (the same structure `input_specs`
+produces) so train/serve/dryrun code never branches on family:
+
+  batch["tokens"]      (B, S) int32           — all families
+  batch["labels"]      (B, S) int32           — training
+  batch["frames"]      (B, S_enc, d) bf16     — encdec (stub frontend)
+  batch["vision_emb"]  (B, T_vis, d_vis) bf16 — vlm   (stub frontend)
+
+forward(...) -> (logits, aux) where aux = {} or MoE stats (aux_loss enters the
+training loss; expert_load feeds the SkewShares re-planner).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from .common import Layout, NO_SHARD, ShardCtx
+from . import encdec, hybrid, moe, ssm, transformer, vlm
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+def family_module(cfg):
+    return _FAMILIES[cfg.family]
+
+
+def layout(cfg) -> Layout:
+    return family_module(cfg).layout(cfg)
+
+
+def forward(params, cfg, batch: dict, shd: ShardCtx = NO_SHARD,
+            last_only: bool = False) -> tuple[jnp.ndarray, dict[str, Any]]:
+    m = family_module(cfg)
+    if cfg.family == "moe":
+        return m.forward(params, cfg, batch["tokens"], shd, last_only=last_only)
+    if cfg.family == "encdec":
+        return m.forward(params, cfg, batch["tokens"], batch["frames"], shd,
+                         last_only=last_only), {}
+    if cfg.family == "vlm":
+        return m.forward(params, cfg, batch["tokens"], batch["vision_emb"],
+                         shd, last_only=last_only), {}
+    return m.forward(params, cfg, batch["tokens"], shd, last_only=last_only), {}
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    return family_module(cfg).init_cache(cfg, batch, max_seq, dtype)
+
+
+def decode_step(params, cfg, cache, batch: dict, pos, shd: ShardCtx = NO_SHARD):
+    m = family_module(cfg)
+    return m.decode_step(params, cfg, cache, batch["tokens"], pos, shd)
+
+
+def prefill(params, cfg, batch: dict, cache, shd: ShardCtx = NO_SHARD):
+    m = family_module(cfg)
+    if cfg.family == "encdec":
+        return m.prefill(params, cfg, batch["tokens"], batch["frames"], cache, shd)
+    if cfg.family == "vlm":
+        return m.prefill(params, cfg, batch["tokens"], batch["vision_emb"],
+                         cache, shd)
+    return m.prefill(params, cfg, batch["tokens"], cache, shd)

@@ -1,0 +1,207 @@
+"""Model substrate: declarative parameter layouts + logical-axis sharding.
+
+One source of truth per architecture: a *layout* — a nested dict mapping
+parameter names to `PDef(shape, logical_axes)`.  From a layout we derive
+  * real initialized parameters       (smoke tests, small-scale training),
+  * ShapeDtypeStruct abstract params  (the 512-device dry-run),
+  * PartitionSpecs                    (pjit in/out shardings),
+so the three can never drift apart.
+
+Sharding is by *logical axis name* resolved through a rules table
+(MaxText-style).  Rules map logical axes to mesh axes; resolution falls back
+to replication whenever the dimension is not divisible by the mesh axis size
+(e.g. qwen2's 2 KV heads on a 16-way model axis).  Changing the rules table —
+not the model code — is how §Perf hillclimbs re-shard.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class PDef:
+    """One parameter: shape + logical axis names (len == ndim) + init scale."""
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"         # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Layout = dict[str, Any]   # nested dict of PDef
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Rules:
+    """logical axis -> mesh axis (or tuple of axes, or None = replicate)."""
+    table: Mapping[str, Any]
+    dp_axes: tuple[str, ...]          # all data-parallel mesh axes ("pod","data")
+
+    def mesh_axes(self, logical: str | None) -> Any:
+        if logical is None:
+            return None
+        if logical == "batch":
+            return self.dp_axes
+        return self.table.get(logical, None)
+
+    def override(self, **kw) -> "Rules":
+        t = dict(self.table)
+        t.update(kw)
+        return Rules(t, self.dp_axes)
+
+
+def default_rules(mesh: Mesh) -> Rules:
+    """Baseline: TP over 'model', FSDP over 'data', DP over ('pod','data')."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return Rules({
+        # parameters
+        "vocab": "model",
+        "embed": "data",          # FSDP axis of 2-D weights
+        "ffn": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "experts": "model",
+        "expert_ffn": None,
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "conv_k": None,
+        "layers": None,
+        # activations
+        "act_embed": None,
+        "act_seq": None,          # flip to "model" for sequence parallelism
+        "act_heads": "model",
+        "act_experts": "model",
+        "act_vocab": "model",
+    }, dp)
+
+
+def _axis_size(mesh: Mesh, axes: Any) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def resolve_pspec(pdef_shape: tuple[int, ...], logical: tuple[str | None, ...],
+                  rules: Rules, mesh: Mesh) -> P:
+    """PartitionSpec with divisibility fallback (replicate what doesn't fit)
+    and first-wins duplicate-axis resolution (a mesh axis can shard only one
+    dimension)."""
+    out = []
+    used: set[str] = set()
+    for dim, name in zip(pdef_shape, logical):
+        axes = rules.mesh_axes(name)
+        flat = (axes,) if isinstance(axes, str) else tuple(axes or ())
+        if (axes is not None and dim > 0
+                and dim % _axis_size(mesh, axes) == 0
+                and not (set(flat) & used)):
+            out.append(axes)
+            used |= set(flat)
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Layout -> params / abstract / specs
+# ---------------------------------------------------------------------------
+
+def _is_pdef(x) -> bool:
+    return isinstance(x, PDef)
+
+
+def map_layout(layout: Layout, fn: Callable[[PDef, tuple[str, ...]], Any],
+               _path: tuple[str, ...] = ()) -> Any:
+    if _is_pdef(layout):
+        return fn(layout, _path)
+    return {k: map_layout(v, fn, _path + (k,)) for k, v in layout.items()}
+
+
+def init_params(layout: Layout, key: jax.Array, dtype=jnp.bfloat16):
+    leaves: list[tuple[PDef, tuple[str, ...]]] = []
+    map_layout(layout, lambda p, path: leaves.append((p, path)))
+    keys = jax.random.split(key, max(len(leaves), 1))
+    key_of = {path: k for (p, path), k in zip(leaves, keys)}
+
+    def mk(p: PDef, path):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, dtype)
+        return (jax.random.normal(key_of[path], p.shape, jnp.float32)
+                * p.scale).astype(dtype)
+
+    return map_layout(layout, mk)
+
+
+def abstract_params(layout: Layout, dtype=jnp.bfloat16):
+    return map_layout(layout, lambda p, _: jax.ShapeDtypeStruct(p.shape, dtype))
+
+
+def param_pspecs(layout: Layout, rules: Rules, mesh: Mesh):
+    return map_layout(
+        layout, lambda p, _: resolve_pspec(p.shape, p.axes, rules, mesh))
+
+
+def param_shardings(layout: Layout, rules: Rules, mesh: Mesh):
+    return map_layout(
+        layout,
+        lambda p, _: NamedSharding(mesh, resolve_pspec(p.shape, p.axes, rules, mesh)))
+
+
+def stack_layers(layout: Layout, n: int) -> Layout:
+    """Prepend a scanned 'layers' dimension to every param of a block layout."""
+    return map_layout(
+        layout,
+        lambda p, _: replace(p, shape=(n,) + p.shape, axes=("layers",) + p.axes))
+
+
+def count_params(layout: Layout) -> int:
+    total = 0
+
+    def add(p: PDef, _):
+        nonlocal total
+        total += math.prod(p.shape)
+
+    map_layout(layout, add)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (no-op outside jit/mesh context)
+# ---------------------------------------------------------------------------
+
+class ShardCtx:
+    """Carries (mesh, rules) through model code; `shard(x, *logical)` pins
+    activation shardings.  A None ctx (unit tests, single device) is a no-op."""
+
+    def __init__(self, mesh: Mesh | None, rules: Rules | None):
+        self.mesh, self.rules = mesh, rules
+
+    def shard(self, x: jnp.ndarray, *logical: str | None) -> jnp.ndarray:
+        if self.mesh is None or self.rules is None:
+            return x
+        spec = resolve_pspec(x.shape, tuple(logical), self.rules, self.mesh)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+NO_SHARD = ShardCtx(None, None)

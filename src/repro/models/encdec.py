@@ -1,0 +1,149 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The audio/text frontend is a STUB per the brief: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model) from `input_specs`, where
+S_enc = seq_len // enc_ratio.  Encoder blocks are bidirectional; decoder
+blocks are causal self-attention + cross-attention into the encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Layout, NO_SHARD, ShardCtx, stack_layers
+from . import layers as L
+from .transformer import _remat
+
+
+def enc_block_layout(cfg) -> Layout:
+    return {"attn": L.attention_layout(cfg),
+            "mlp": L.swiglu_layout(cfg.d_model, cfg.d_ff)}
+
+
+def dec_block_layout(cfg) -> Layout:
+    return {"self_attn": L.attention_layout(cfg),
+            "cross_attn": L.cross_attention_layout(cfg),
+            "mlp": L.swiglu_layout(cfg.d_model, cfg.d_ff)}
+
+
+def layout(cfg) -> Layout:
+    return {
+        "embed": L.embed_layout(cfg),
+        "enc_blocks": stack_layers(enc_block_layout(cfg), cfg.enc_layers),
+        "enc_norm": L.rmsnorm_layout(cfg.d_model),
+        "dec_blocks": stack_layers(dec_block_layout(cfg), cfg.n_layers),
+    }
+
+
+def _bidir_attention(p, cfg, x, positions, shd):
+    """Encoder self-attention: full (non-causal) visibility."""
+    h = L.rmsnorm(x, p["norm"])
+    q, k, v = L._qkv(p, cfg, h, positions)
+    S = x.shape[1]
+    if cfg.attn_chunk and S > cfg.attn_chunk:
+        o = L._sdpa_chunked(q, k, v, 0, 0, cfg.attn_chunk, causal=False)
+    else:
+        o = L._sdpa_dense(q, k, v, jnp.zeros((S, S), jnp.float32))
+    o = o.reshape(*x.shape[:2], -1)
+    return x + shd.shard(o @ p["wo"], "batch", "act_seq", "act_embed")
+
+
+def encode(params, cfg, frames: jnp.ndarray, shd: ShardCtx = NO_SHARD
+           ) -> jnp.ndarray:
+    """frames (B, S_enc, d_model) precomputed frontend embeddings."""
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = shd.shard(frames, "batch", "act_seq", "act_embed")
+
+    def body(x, lp):
+        x = _bidir_attention(lp["attn"], cfg, x, positions, shd)
+        return L.swiglu(lp["mlp"], x, shd), ()
+
+    body = _remat(body, cfg.remat)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rmsnorm(x, params["enc_norm"])
+
+
+def forward(params, cfg, tokens: jnp.ndarray, frames: jnp.ndarray,
+            shd: ShardCtx = NO_SHARD, last_only: bool = False) -> jnp.ndarray:
+    """Teacher-forced training pass: (dec tokens, enc frames) -> logits."""
+    enc_out = encode(params, cfg, frames, shd)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = L.embed(params["embed"], cfg, tokens, shd)
+
+    def body(x, lp):
+        x = L.self_attention(lp["self_attn"], cfg, x, positions, shd)
+        x = L.cross_attention(lp["cross_attn"], cfg, x, enc_out, shd)
+        return L.swiglu(lp["mlp"], x, shd), ()
+
+    body = _remat(body, cfg.remat)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    if last_only:
+        x = x[:, -1:]
+    return L.logits(params["embed"], cfg, x, shd)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    hd = cfg.hd()
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd)
+    enc_len = max(max_seq // cfg.enc_ratio, 1)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), dtype)}
+
+
+def decode_step(params, cfg, cache: dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, shd: ShardCtx = NO_SHARD):
+    """Decoder step with cached encoder output + self-attn KV cache."""
+    x = L.embed(params["embed"], cfg, tokens, shd)
+    enc_out = cache["enc_out"]
+
+    def body(x, scanned):
+        lp, ck, cv = scanned
+        x, ck, cv = L.decode_attention(lp["self_attn"], cfg, x, ck, cv, pos)
+        x = L.cross_attention(lp["cross_attn"], cfg, x, enc_out, shd)
+        x = L.swiglu(lp["mlp"], x, shd)
+        return x, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"]))
+    return (L.logits(params["embed"], cfg, x, shd),
+            {"k": nk, "v": nv, "enc_out": enc_out})
+
+
+def prefill(params, cfg, tokens: jnp.ndarray, frames: jnp.ndarray,
+            cache: dict, shd: ShardCtx = NO_SHARD):
+    enc_out = encode(params, cfg, frames, shd)
+    cache = dict(cache)
+    cache["enc_out"] = enc_out.astype(cache["enc_out"].dtype)
+    lg = None
+    # Teacher-forced fill of the self-attn cache via the parallel form.
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = L.embed(params["embed"], cfg, tokens, shd)
+
+    def body(x, scanned):
+        lp, ck, cv = scanned
+        h = L.rmsnorm(x, lp["self_attn"]["norm"])
+        q, k, v = L._qkv(lp["self_attn"], cfg, h, positions)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
+        if cfg.attn_chunk and S > cfg.attn_chunk:
+            o = L._sdpa_chunked(q, k, v, 0, 0, cfg.attn_chunk)
+        else:
+            o = L._sdpa_dense(q, k, v, L._causal_mask(S, S, 0, 0))
+        x = x + o.reshape(B, S, -1) @ lp["self_attn"]["wo"]
+        x = L.cross_attention(lp["cross_attn"], cfg, x, enc_out, shd)
+        x = L.swiglu(lp["mlp"], x, shd)
+        return x, (ck, cv)
+
+    body = _remat(body, cfg.remat)
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"]))
+    lg = L.logits(params["embed"], cfg, x[:, -1:], shd)
+    return lg, {"k": nk, "v": nv, "enc_out": cache["enc_out"]}
+
+
+def cache_axes(cfg) -> dict:
+    attn = ("layers", "batch", None, "kv_heads", None)
+    return {"k": attn, "v": attn, "enc_out": ("batch", "act_seq", None)}

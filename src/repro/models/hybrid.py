@@ -1,0 +1,161 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block.
+
+Structure: groups of `attn_every` Mamba2 blocks, each group followed by one
+application of a single shared transformer block (attention + SwiGLU with the
+SAME parameters every application — zamba2's parameter-sharing trick).  With
+n_layers = 81, attn_every = 6: 11 groups of (6 mamba + 1 shared application)
+plus 4 tail mamba blocks = 81 block applications, 13... see configs/zamba2_7b
+for the exact accounting.  The shared block uses sliding-window attention so
+the 500k-token decode stays sub-quadratic (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Layout, NO_SHARD, ShardCtx, stack_layers
+from . import layers as L
+from . import ssm as M
+from .transformer import _remat
+
+
+def group_counts(cfg) -> tuple[int, int]:
+    """(n_groups, n_tail_mamba): n_layers = n_groups·(attn_every+1) + tail."""
+    per = cfg.attn_every + 1
+    n_groups = cfg.n_layers // per
+    tail = cfg.n_layers - n_groups * per
+    return n_groups, tail
+
+
+def layout(cfg) -> Layout:
+    n_groups, tail = group_counts(cfg)
+    lay = {
+        "embed": L.embed_layout(cfg),
+        "mamba_blocks": stack_layers(M.mamba_layout(cfg),
+                                     n_groups * cfg.attn_every),
+        "shared_attn": L.attention_layout(cfg),
+        "shared_mlp": L.swiglu_layout(cfg.d_model, cfg.d_ff),
+    }
+    if tail:
+        lay["tail_blocks"] = stack_layers(M.mamba_layout(cfg), tail)
+    return lay
+
+
+def forward(params, cfg, tokens: jnp.ndarray, shd: ShardCtx = NO_SHARD,
+            last_only: bool = False) -> jnp.ndarray:
+    B, S = tokens.shape
+    n_groups, tail = group_counts(cfg)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = L.embed(params["embed"], cfg, tokens, shd)
+    grouped = jax.tree.map(
+        lambda a: a.reshape(n_groups, cfg.attn_every, *a.shape[1:]),
+        params["mamba_blocks"])
+    shared_attn, shared_mlp = params["shared_attn"], params["shared_mlp"]
+
+    def group_body(x, gp):
+        def inner(x, lp):
+            return M.mamba_block(lp, cfg, x, shd), ()
+        # Nested remat: without it the whole 6-mamba group's SSD intermediates
+        # (decay tensors ~4 GB/layer at 32k) stay live inside the outer
+        # checkpoint -> 40 GB/device at prefill_32k (EXPERIMENTS.md §Perf).
+        inner = _remat(inner, cfg.remat)
+        x, _ = jax.lax.scan(inner, x, gp)
+        x = L.self_attention(shared_attn, cfg, x, positions, shd)
+        x = L.swiglu(shared_mlp, x, shd)
+        return x, ()
+
+    group_body = _remat(group_body, cfg.remat)
+    x, _ = jax.lax.scan(group_body, x, grouped)
+    if tail:
+        def inner(x, lp):
+            return M.mamba_block(lp, cfg, x, shd), ()
+        inner = _remat(inner, cfg.remat)
+        x, _ = jax.lax.scan(inner, x, params["tail_blocks"])
+    if last_only:
+        x = x[:, -1:]
+    return L.logits(params["embed"], cfg, x, shd)
+
+
+# ---------------------------------------------------------------------------
+# Serving: mamba states + windowed KV for the shared block applications.
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    n_groups, tail = group_counts(cfg)
+    st = M.init_block_state(cfg, batch, dtype)
+    window = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    hd = cfg.hd()
+    return {
+        "mamba": jax.tree.map(
+            lambda a: jnp.zeros((n_groups * cfg.attn_every,) + a.shape, a.dtype), st),
+        "tail": jax.tree.map(
+            lambda a: jnp.zeros((tail,) + a.shape, a.dtype), st) if tail else None,
+        "attn_k": jnp.zeros((n_groups, batch, window, cfg.n_kv_heads, hd), dtype),
+        "attn_v": jnp.zeros((n_groups, batch, window, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def decode_step(params, cfg, cache: dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, shd: ShardCtx = NO_SHARD):
+    """Windowed KV: slot = pos % window (ring buffer); masking handles wrap."""
+    n_groups, tail = group_counts(cfg)
+    x = L.embed(params["embed"], cfg, tokens, shd)
+    grouped = jax.tree.map(
+        lambda a: a.reshape(n_groups, cfg.attn_every, *a.shape[1:]),
+        params["mamba_blocks"])
+    window = cache["attn_k"].shape[2]
+    ring_pos = pos % window
+    # Slot s holds a token iff it has been written: s <= pos before the first
+    # wrap, every slot afterwards (all within the sliding window by then).
+    kv_valid = (jnp.arange(window)[None, :] <= pos[:, None]) | \
+               (pos[:, None] >= window)
+    shared_attn, shared_mlp = params["shared_attn"], params["shared_mlp"]
+
+    def group_body(x, scanned):
+        gp, st, ck, cv = scanned
+
+        def inner(x, inner_scanned):
+            lp, s = inner_scanned
+            x, s = M.mamba_decode(lp, cfg, x, s)
+            return x, s
+
+        x, st = jax.lax.scan(inner, x, (gp, st))
+        x, ck, cv = L.decode_attention(
+            shared_attn, cfg, x, ck, cv, pos, write_pos=ring_pos,
+            kv_valid=kv_valid)
+        x = L.swiglu(shared_mlp, x, shd)
+        return x, (st, ck, cv)
+
+    mgrp = jax.tree.map(
+        lambda a: a.reshape(n_groups, cfg.attn_every, *a.shape[1:]),
+        cache["mamba"])
+    x, (mst, nk, nv) = jax.lax.scan(
+        group_body, x, (grouped, mgrp, cache["attn_k"], cache["attn_v"]))
+    new_cache = {
+        "mamba": jax.tree.map(
+            lambda a: a.reshape(n_groups * cfg.attn_every, *a.shape[2:]), mst),
+        "tail": cache["tail"],
+        "attn_k": nk, "attn_v": nv,
+    }
+    if tail:
+        def inner(x, sc):
+            lp, s = sc
+            x, s = M.mamba_decode(lp, cfg, x, s)
+            return x, s
+        x, tst = jax.lax.scan(inner, x, (params["tail_blocks"], cache["tail"]))
+        new_cache["tail"] = tst
+    return L.logits(params["embed"], cfg, x, shd), new_cache
+
+
+def prefill(params, cfg, tokens, cache, shd: ShardCtx = NO_SHARD):
+    lg = forward(params, cfg, tokens, shd, last_only=True)
+    return lg, cache
+
+
+def cache_axes(cfg) -> dict:
+    mamba = {"ssm": ("layers", "batch", "ssm_heads", None, None),
+             "conv": ("layers", "batch", None, "ssm_inner")}
+    _, tail = group_counts(cfg)
+    attn = ("layers", "batch", None, "kv_heads", None)
+    return {"mamba": mamba, "tail": mamba if tail else None,
+            "attn_k": attn, "attn_v": attn}

@@ -1,0 +1,334 @@
+"""Shared transformer primitives: RMSNorm, RoPE, GQA attention, SwiGLU.
+
+Everything is a pure function over explicit params (nested dicts from the
+layout machinery in common.py).  Attention supports:
+  * grouped-query heads (n_kv_heads < n_heads), optional QKV bias (qwen2),
+    optional q/k RMSNorm (qwen3), sliding windows (mixtral, zamba2 long-ctx),
+  * dense or *chunked* softmax (flash-style online-softmax scan over KV blocks
+    — the memory-roofline lever for 32k prefill),
+  * decode steps against a preallocated KV cache,
+  * cross-attention (enc-dec and VLM image layers).
+
+Computation is bf16 with fp32 softmax/normalization accumulators, matching
+production TPU practice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import PDef, ShardCtx, NO_SHARD
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_layout(dim: int) -> PDef:
+    return PDef((dim,), ("embed",), init="ones")
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)              # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_layout(cfg) -> dict[str, Any]:
+    d, hd = cfg.d_model, cfg.hd()
+    lay = {
+        "wq": PDef((d, cfg.n_heads * hd), ("embed", "heads")),
+        "wk": PDef((d, cfg.n_kv_heads * hd), ("embed", "kv_heads")),
+        "wv": PDef((d, cfg.n_kv_heads * hd), ("embed", "kv_heads")),
+        "wo": PDef((cfg.n_heads * hd, d), ("heads", "embed")),
+        "norm": rmsnorm_layout(d),
+    }
+    if cfg.qkv_bias:
+        lay["bq"] = PDef((cfg.n_heads * hd,), ("heads",), init="zeros")
+        lay["bk"] = PDef((cfg.n_kv_heads * hd,), ("kv_heads",), init="zeros")
+        lay["bv"] = PDef((cfg.n_kv_heads * hd,), ("kv_heads",), init="zeros")
+    if cfg.qk_norm:
+        lay["q_norm"] = PDef((hd,), (None,), init="ones")
+        lay["k_norm"] = PDef((hd,), (None,), init="ones")
+    return lay
+
+
+def _qkv(p, cfg, x, positions, rope: bool = True):
+    B, S, _ = x.shape
+    hd = cfg.hd()
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B,S,kv,hd) -> (B,S,H,hd) by repeating each kv head H/kv times.
+
+    Kept for reference only — the attention paths below use grouped einsums
+    instead of materializing the expansion (a (B,S,H,hd) broadcast of the KV
+    cache is pure wasted HBM, and under sharding it forced an involuntary
+    full-rematerialization copy; see EXPERIMENTS.md §Perf)."""
+    B, S, kv, hd = k.shape
+    rep = n_heads // kv
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, kv, rep, hd)
+                            ).reshape(B, S, n_heads, hd)
+
+
+def _group_q(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """(B,S,H,hd) -> (B,S,kv,rep,hd): query heads grouped by their KV head."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, hd)
+
+
+def _causal_mask(Sq: int, Skv: int, q_offset, window: int) -> jnp.ndarray:
+    """(Sq, Skv) additive mask: causal (+ optional sliding window)."""
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    ok = kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa_dense(q, k, v, mask) -> jnp.ndarray:
+    """Grouped-query SDPA: q:(B,Sq,H,hd) k,v:(B,Skv,KV,hd) mask:(Sq,Skv).
+
+    KV heads are contracted via grouped einsums — the KV tensors are never
+    expanded to H heads."""
+    B, Sq, H, hd = q.shape
+    kv = k.shape[2]
+    qg = _group_q(q, kv)                                   # (B,Sq,kv,rep,hd)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
+    logits = logits / (hd ** 0.5) + mask[None, None, None]
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def _sdpa_chunked(q, k, v, q_offset, window: int, chunk: int,
+                  causal: bool = True) -> jnp.ndarray:
+    """Flash-style online softmax: scan over KV chunks, O(S·chunk) memory.
+
+    q:(B,Sq,H,hd); k,v:(B,Skv,KV,hd) — grouped-query, no KV expansion.
+    Causal (+ optional sliding window) or bidirectional (causal=False).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, kv = k.shape[1], k.shape[2]
+    qg = _group_q(q, kv)                                    # (B,Sq,kv,rep,hd)
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inp):
+        acc, m, l = carry          # (B,Sq,kv,rep,hd), (B,kv,rep,Sq) ×2
+        ci, (kb, vb) = inp
+        kpos = ci * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, kb).astype(jnp.float32)
+        logits = logits / (hd ** 0.5)
+        ok = (kpos < Skv)[None, :]
+        if causal:
+            ok &= kpos[None, :] <= qpos[:, None]
+            if window:
+                ok &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc = (acc * corr.transpose(0, 3, 1, 2)[..., None]
+               + jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(q.dtype), vb))
+        return (acc, m_new, l_new), ()
+
+    rep = H // kv
+    acc0 = jnp.zeros((B, Sq, kv, rep, hd), jnp.float32)
+    m0 = jnp.full((B, kv, rep, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, kv, rep, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0),
+        (jnp.arange(n_chunks), (kc, vc)))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def self_attention(p, cfg, x, positions, shd: ShardCtx = NO_SHARD,
+                   q_offset: int = 0) -> jnp.ndarray:
+    """Full-sequence causal self-attention (training / prefill)."""
+    h = rmsnorm(x, p["norm"])
+    q, k, v = _qkv(p, cfg, h, positions)
+    q = shd.shard(q, "batch", "act_seq", "act_heads", None)
+    S = x.shape[1]
+    if cfg.attn_chunk and S > cfg.attn_chunk:
+        o = _sdpa_chunked(q, k, v, q_offset, cfg.sliding_window, cfg.attn_chunk)
+    else:
+        mask = _causal_mask(S, S, q_offset, cfg.sliding_window)
+        o = _sdpa_dense(q, k, v, mask)
+    o = o.reshape(x.shape[0], S, -1)
+    return x + shd.shard(o @ p["wo"], "batch", "act_seq", "act_embed")
+
+
+def decode_attention(p, cfg, x, cache_k, cache_v, pos, write_pos=None,
+                     kv_valid=None) -> tuple[jnp.ndarray, ...]:
+    """One-token decode: x (B,1,d); cache (B,Smax,kv,hd); pos (B,) int32.
+
+    `pos` is the absolute position (RoPE); `write_pos` the cache slot (ring
+    buffers pass pos % window); `kv_valid` (B,Smax) overrides the causal slot
+    mask for ring buffers.  Returns (y, new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    hd = cfg.hd()
+    if write_pos is None:
+        write_pos = pos
+    h = rmsnorm(x, p["norm"])
+    q, k, v = _qkv(p, cfg, h, pos[:, None])
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, write_pos].set(k[:, 0])
+    cache_v = cache_v.at[bidx, write_pos].set(v[:, 0])
+    Smax = cache_k.shape[1]
+    kpos = jnp.arange(Smax)[None, :]
+    if kv_valid is None:
+        ok = kpos <= pos[:, None]
+        if cfg.sliding_window:
+            ok &= kpos > (pos[:, None] - cfg.sliding_window)
+    else:
+        ok = kv_valid
+    qg = _group_q(q, cfg.n_kv_heads)                   # (B,1,kv,rep,hd)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, cache_k
+                        ).astype(jnp.float32) / (hd ** 0.5)
+    logits = jnp.where(ok[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", probs, cache_v).reshape(B, 1, -1)
+    return x + o @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec, VLM image layers)
+# ---------------------------------------------------------------------------
+
+def cross_attention_layout(cfg) -> dict[str, Any]:
+    lay = attention_layout(cfg)
+    lay.pop("bq", None), lay.pop("bk", None), lay.pop("bv", None)
+    return lay
+
+
+def cross_attention(p, cfg, x, kv_src, shd: ShardCtx = NO_SHARD) -> jnp.ndarray:
+    """x: (B,Sq,d) queries; kv_src: (B,Skv,d) encoder/vision states (no RoPE)."""
+    B, Sq, _ = x.shape
+    Skv = kv_src.shape[1]
+    hd = cfg.hd()
+    h = rmsnorm(x, p["norm"])
+    q = (h @ p["wq"]).reshape(B, Sq, cfg.n_heads, hd)
+    k = (kv_src @ p["wk"]).reshape(B, Skv, cfg.n_kv_heads, hd)
+    v = (kv_src @ p["wv"]).reshape(B, Skv, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q, k = rmsnorm(q, p["q_norm"]), rmsnorm(k, p["k_norm"])
+    # Dense (Sq, Skv) cross-attention logits at 32k decode-side tokens cost
+    # ~34 GB/layer fp32; chunk the KV side like self-attention (§Perf).
+    if cfg.attn_chunk and Sq * Skv > cfg.attn_chunk ** 2:
+        o = _sdpa_chunked(q, k, v, 0, 0, min(cfg.attn_chunk, Skv),
+                          causal=False)
+    else:
+        o = _sdpa_dense(q, k, v, jnp.zeros((Sq, Skv), jnp.float32))
+    o = o.reshape(B, Sq, -1)
+    return x + shd.shard(o @ p["wo"], "batch", "act_seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_layout(d_model: int, d_ff: int) -> dict[str, Any]:
+    return {
+        "w1": PDef((d_model, d_ff), ("embed", "ffn")),
+        "w3": PDef((d_model, d_ff), ("embed", "ffn")),
+        "w2": PDef((d_ff, d_model), ("ffn", "embed")),
+        "norm": rmsnorm_layout(d_model),
+    }
+
+
+def swiglu(p, x, shd: ShardCtx = NO_SHARD) -> jnp.ndarray:
+    h = rmsnorm(x, p["norm"])
+    g = jax.nn.silu(h @ p["w1"]) * (h @ p["w3"])
+    g = shd.shard(g, "batch", "act_seq", "act_heads")
+    return x + shd.shard(g @ p["w2"], "batch", "act_seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def embed_layout(cfg) -> dict[str, Any]:
+    vp = cfg.padded_vocab()
+    lay = {
+        "tok": PDef((vp, cfg.d_model), ("vocab", "embed"), scale=0.01),
+        "final_norm": rmsnorm_layout(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        lay["unembed"] = PDef((cfg.d_model, vp), ("embed", "vocab"),
+                              scale=0.01)
+    return lay
+
+
+def embed(p, cfg, tokens: jnp.ndarray, shd: ShardCtx = NO_SHARD) -> jnp.ndarray:
+    x = p["tok"][tokens]
+    return shd.shard(x, "batch", "act_seq", "act_embed")
+
+
+def logits(p, cfg, x: jnp.ndarray, shd: ShardCtx = NO_SHARD) -> jnp.ndarray:
+    """(B,S,d) -> (B,S,padded_vocab); pad columns masked to -inf."""
+    h = rmsnorm(x, p["final_norm"])
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    out = h @ w
+    if cfg.logits_fp32:
+        out = out.astype(jnp.float32)
+    vp = cfg.padded_vocab()
+    if vp != cfg.vocab:
+        col = jax.lax.broadcasted_iota(jnp.int32, out.shape, out.ndim - 1)
+        out = jnp.where(col < cfg.vocab, out, NEG_INF)
+    return shd.shard(out, "batch", "act_seq", "act_vocab")

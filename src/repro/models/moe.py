@@ -1,0 +1,219 @@
+"""MoE transformer (mixtral-8x22b, kimi-k2) with SkewShares expert dispatch.
+
+The FFN is a top-k mixture of experts routed through the paper's machinery
+(core.moe_shares): experts own *physical slots*; hot experts hold 2^j replica
+slots and their tokens hash-split across replicas — Example 1.2's grid applied
+to expert parallelism.  Dispatch is sort-based (argsort by slot + capacity
+clamp + gather), the same ragged->dense packing the join executor uses, which
+is the TPU-idiomatic alternative to one-hot einsum dispatch (O(T·k) memory
+instead of O(T·slots·cap)).
+
+Per-expert token loads are measured on-device with the `segment_histogram`
+Pallas kernel and handed back to the trainer, which re-plans replication when
+observed skew drifts (a recompile — infrequent by design).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.moe_shares import MoEDispatchPlan, plan_dispatch, route_tokens
+from ..kernels import ops as kops
+from .common import Layout, NO_SHARD, PDef, ShardCtx, stack_layers
+from . import layers as L
+from .transformer import _remat
+
+
+def moe_layout(cfg) -> Layout:
+    n_slots = cfg.n_slots()
+    return {
+        "router": PDef((cfg.d_model, cfg.n_experts), ("embed", None), scale=0.01),
+        "w1": PDef((n_slots, cfg.d_model, cfg.d_ff), ("experts", "embed", "expert_ffn")),
+        "w3": PDef((n_slots, cfg.d_model, cfg.d_ff), ("experts", "embed", "expert_ffn")),
+        "w2": PDef((n_slots, cfg.d_ff, cfg.d_model), ("experts", "expert_ffn", "embed")),
+        "norm": L.rmsnorm_layout(cfg.d_model),
+    }
+
+
+def block_layout(cfg) -> Layout:
+    return {"attn": L.attention_layout(cfg), "moe": moe_layout(cfg)}
+
+
+def layout(cfg) -> Layout:
+    return {"embed": L.embed_layout(cfg),
+            "blocks": stack_layers(block_layout(cfg), cfg.n_layers)}
+
+
+def build_plan(cfg, loads: np.ndarray | None = None) -> MoEDispatchPlan:
+    """Static dispatch plan; `loads` from trainer metrics enables re-planning."""
+    if loads is None:
+        loads = np.ones(cfg.n_experts)
+    return plan_dispatch(loads, cfg.n_slots())
+
+
+def moe_ffn(p, cfg, plan: MoEDispatchPlan, x: jnp.ndarray,
+            shd: ShardCtx = NO_SHARD) -> tuple[jnp.ndarray, dict]:
+    """x (B,S,d) -> (y (B,S,d), {'aux_loss': (), 'expert_load': (E,)}).
+
+    Dispatch is PER SEQUENCE (vmapped over the batch axis): every intermediate
+    keeps the DP-sharded leading B axis, so sorting/packing stays local to the
+    token's devices and the only cross-device movement is the token->expert
+    exchange of the expert einsums themselves.  (The earlier global-token
+    formulation made XLA all-gather the full hidden states per layer — see
+    EXPERIMENTS.md §Perf, kimi-k2 hillclimb.)
+    """
+    B, S, d = x.shape
+    K = cfg.topk
+    n_slots = plan.n_slots
+    h = L.rmsnorm(x, p["norm"])                                   # (B,S,d)
+
+    # Router (fp32 for stable softmax).
+    logits = h.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                       # (B,S,E)
+    weights, eidx = jax.lax.top_k(gates, K)                       # (B,S,K)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # Aux load-balancing loss (switch-style) + on-device load histogram
+    # (Pallas segment_histogram) for the SkewShares re-planner.
+    frac_prob = gates.mean(axis=(0, 1))                           # (E,)
+    onehot_top1 = jax.nn.one_hot(eidx[..., 0], cfg.n_experts, dtype=jnp.float32)
+    frac_tok = onehot_top1.mean(axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(frac_prob * frac_tok)
+    load = kops.segment_histogram(eidx.reshape(-1), cfg.n_experts)
+
+    # SkewShares slot routing: hot experts' tokens hash-split across replicas
+    # (hash of the in-sequence position splits evenly within every sequence).
+    pos_ids = jnp.broadcast_to(
+        jnp.arange(S, dtype=jnp.int32)[None, :, None], (B, S, K))
+    slots = route_tokens(plan, eidx.reshape(-1),
+                         pos_ids.reshape(-1)).reshape(B, S * K)
+
+    cap = max(1, int(np.ceil(S * K / n_slots * cfg.moe_capacity_factor)))
+
+    def dispatch_row(h_row, slots_row):
+        """One sequence: (S,d), (S*K,) -> packed (n_slots, cap, d) + plumbing."""
+        order = jnp.argsort(slots_row, stable=True)
+        s_sorted = slots_row[order]
+        start = jnp.searchsorted(s_sorted, s_sorted, side="left")
+        pos = jnp.arange(S * K, dtype=jnp.int32) - start.astype(jnp.int32)
+        keep = pos < cap
+        flat_idx = jnp.where(keep, s_sorted * cap + pos, n_slots * cap)
+        buf = jnp.zeros((n_slots * cap, d), h_row.dtype)
+        buf = buf.at[flat_idx].set(h_row[order // K], mode="drop")
+        return buf.reshape(n_slots, cap, d), order, keep, flat_idx
+
+    xe, order, keep, flat_idx = jax.vmap(dispatch_row)(h, slots)
+    xe = shd.shard(xe, "batch", "act_experts", None, None)
+    dropped = (~keep).sum()
+
+    # Expert FFN, batched over (batch, slots).
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["w1"]))
+    g = g * jnp.einsum("becd,edf->becf", xe, p["w3"])
+    ye = jnp.einsum("becf,efd->becd", g, p["w2"])
+    ye = shd.shard(ye, "batch", "act_experts", None, None)
+
+    def combine_row(y_row, order_row, keep_row, flat_row):
+        y_flat = y_row.reshape(n_slots * cap, d)
+        safe = jnp.where(keep_row, flat_row, 0)
+        y_sorted = jnp.where(keep_row[:, None], y_flat[safe], 0)
+        inv = jnp.argsort(order_row)
+        return y_sorted[inv].reshape(S, K, d)
+
+    y_tok_k = jax.vmap(combine_row)(ye, order, keep, flat_idx)    # (B,S,K,d)
+    y = (y_tok_k * weights[..., None].astype(x.dtype)).sum(axis=2)
+    out = x + y
+    return out, {"aux_loss": aux, "expert_load": load,
+                 "dropped_tokens": dropped}
+
+
+def block_apply(p, cfg, plan, x, positions, shd) -> tuple[jnp.ndarray, dict]:
+    x = L.self_attention(p["attn"], cfg, x, positions, shd)
+    return moe_ffn(p["moe"], cfg, plan, x, shd)
+
+
+def forward(params, cfg, tokens: jnp.ndarray, shd: ShardCtx = NO_SHARD,
+            plan: MoEDispatchPlan | None = None, last_only: bool = False
+            ) -> tuple[jnp.ndarray, dict]:
+    plan = plan or build_plan(cfg)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = L.embed(params["embed"], cfg, tokens, shd)
+
+    def body(carry, lp):
+        x, aux, loads = carry
+        x, stats = block_apply(lp, cfg, plan, x, positions, shd)
+        return (x, aux + stats["aux_loss"], loads + stats["expert_load"]), ()
+
+    body = _remat(body, cfg.remat)
+    init = (x, jnp.float32(0.0), jnp.zeros((cfg.n_experts,), jnp.int32))
+    if cfg.scan_layers:
+        (x, aux, loads), _ = jax.lax.scan(body, init, params["blocks"])
+    else:
+        carry = init
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["blocks"])
+            carry, _ = body(carry, lp)
+        x, aux, loads = carry
+    if last_only:
+        x = x[:, -1:]
+    lg = L.logits(params["embed"], cfg, x, shd)
+    return lg, {"aux_loss": aux / cfg.n_layers, "expert_load": loads}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    from . import transformer as TF
+    return TF.init_cache(cfg, batch, max_seq, dtype)
+
+
+def decode_step(params, cfg, cache, tokens, pos, shd: ShardCtx = NO_SHARD,
+                plan: MoEDispatchPlan | None = None):
+    plan = plan or build_plan(cfg)
+    x = L.embed(params["embed"], cfg, tokens, shd)
+
+    def body(x, scanned):
+        lp, ck, cv = scanned
+        x, ck, cv = L.decode_attention(lp["attn"], cfg, x, ck, cv, pos)
+        x, _ = moe_ffn(lp["moe"], cfg, plan, x, shd)
+        return x, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+    return L.logits(params["embed"], cfg, x, shd), {"k": nk, "v": nv}
+
+
+def prefill(params, cfg, tokens, cache, shd: ShardCtx = NO_SHARD,
+            plan: MoEDispatchPlan | None = None):
+    plan = plan or build_plan(cfg)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = L.embed(params["embed"], cfg, tokens, shd)
+
+    def body(x, scanned):
+        lp, ck, cv = scanned
+        h = L.rmsnorm(x, lp["attn"]["norm"])
+        q, k, v = L._qkv(lp["attn"], cfg, h, positions)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
+        if cfg.attn_chunk and S > cfg.attn_chunk:
+            o = L._sdpa_chunked(q, k, v, 0, cfg.sliding_window, cfg.attn_chunk)
+        else:
+            o = L._sdpa_dense(q, k, v, L._causal_mask(S, S, 0, cfg.sliding_window))
+        x = x + o.reshape(B, S, -1) @ lp["attn"]["wo"]
+        x, _ = moe_ffn(lp["moe"], cfg, plan, x, shd)
+        return x, (ck, cv)
+
+    body = _remat(body, cfg.remat)
+    x, (nk, nv) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+    return L.logits(params["embed"], cfg, x[:, -1:], shd), {"k": nk, "v": nv}
+
+
+def cache_axes(cfg) -> dict:
+    from . import transformer as TF
+    return TF.cache_axes(cfg)

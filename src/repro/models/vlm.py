@@ -1,0 +1,157 @@
+"""Llama-3.2-Vision-style VLM backbone: decoder with interleaved image
+cross-attention layers.
+
+The vision frontend is a STUB per the brief: `input_specs` provides
+precomputed patch embeddings (B, vision_tokens, vision_dim); a learned
+projection lifts them to d_model.  Every `cross_attn_every` self-attention
+blocks, one cross-attention block attends into the projected vision tokens —
+the 100-layer spec = 80 self + 20 cross (cross_attn_every=4), see the config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Layout, NO_SHARD, PDef, ShardCtx, stack_layers
+from . import layers as L
+from .transformer import _remat, block_layout as sa_block_layout
+
+
+def group_counts(cfg) -> tuple[int, int]:
+    """n_layers = n_groups·(cross_attn_every self + 1 cross) + tail self."""
+    per = cfg.cross_attn_every + 1
+    n_groups = cfg.n_layers // per
+    tail = cfg.n_layers - n_groups * per
+    return n_groups, tail
+
+
+def ca_block_layout(cfg) -> Layout:
+    return {"xattn": L.cross_attention_layout(cfg),
+            "mlp": L.swiglu_layout(cfg.d_model, cfg.d_ff),
+            "gate": PDef((1,), (None,), init="zeros")}   # zero-init gated xattn
+
+
+def layout(cfg) -> Layout:
+    n_groups, tail = group_counts(cfg)
+    lay = {
+        "embed": L.embed_layout(cfg),
+        "vision_proj": PDef((cfg.vision_dim, cfg.d_model), (None, "embed")),
+        "sa_blocks": stack_layers(sa_block_layout(cfg),
+                                  n_groups * cfg.cross_attn_every),
+        "ca_blocks": stack_layers(ca_block_layout(cfg), n_groups),
+    }
+    if tail:
+        lay["tail_blocks"] = stack_layers(sa_block_layout(cfg), tail)
+    return lay
+
+
+def _apply_ca(p, cfg, x, vis, shd):
+    h = L.cross_attention(p["xattn"], cfg, x, vis, shd)
+    x = x + p["gate"] * (h - x)          # gated residual (zero-init = identity)
+    return L.swiglu(p["mlp"], x, shd)
+
+
+def forward(params, cfg, tokens: jnp.ndarray, vision_emb: jnp.ndarray,
+            shd: ShardCtx = NO_SHARD, last_only: bool = False) -> jnp.ndarray:
+    """tokens (B,S); vision_emb (B, vision_tokens, vision_dim)."""
+    B, S = tokens.shape
+    n_groups, tail = group_counts(cfg)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    vis = vision_emb.astype(params["vision_proj"].dtype) @ params["vision_proj"]
+    x = L.embed(params["embed"], cfg, tokens, shd)
+    sa_grouped = jax.tree.map(
+        lambda a: a.reshape(n_groups, cfg.cross_attn_every, *a.shape[1:]),
+        params["sa_blocks"])
+
+    def group_body(x, gp):
+        sa, ca = gp
+
+        def inner(x, lp):
+            x = L.self_attention(lp["attn"], cfg, x, positions, shd)
+            return L.swiglu(lp["mlp"], x, shd), ()
+
+        x, _ = jax.lax.scan(inner, x, sa)
+        return _apply_ca(ca, cfg, x, vis, shd), ()
+
+    group_body = _remat(group_body, cfg.remat)
+    x, _ = jax.lax.scan(group_body, x, (sa_grouped, params["ca_blocks"]))
+    if tail:
+        def inner(x, lp):
+            x = L.self_attention(lp["attn"], cfg, x, positions, shd)
+            return L.swiglu(lp["mlp"], x, shd), ()
+        inner = _remat(inner, cfg.remat)
+        x, _ = jax.lax.scan(inner, x, params["tail_blocks"])
+    if last_only:
+        x = x[:, -1:]
+    return L.logits(params["embed"], cfg, x, shd)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    n_groups, tail = group_counts(cfg)
+    hd = cfg.hd()
+    mk = lambda n: (jnp.zeros((n, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+                    jnp.zeros((n, batch, max_seq, cfg.n_kv_heads, hd), dtype))
+    sk, sv = mk(n_groups * cfg.cross_attn_every)
+    tk, tv = mk(tail) if tail else (None, None)
+    return {"sa_k": sk, "sa_v": sv, "tail_k": tk, "tail_v": tv,
+            "vis": jnp.zeros((batch, cfg.vision_tokens, cfg.d_model), dtype)}
+
+
+def decode_step(params, cfg, cache: dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, shd: ShardCtx = NO_SHARD):
+    n_groups, tail = group_counts(cfg)
+    x = L.embed(params["embed"], cfg, tokens, shd)
+    vis = cache["vis"]
+    sa_grouped = jax.tree.map(
+        lambda a: a.reshape(n_groups, cfg.cross_attn_every, *a.shape[1:]),
+        params["sa_blocks"])
+    ck = cache["sa_k"].reshape(n_groups, cfg.cross_attn_every, *cache["sa_k"].shape[1:])
+    cv = cache["sa_v"].reshape(n_groups, cfg.cross_attn_every, *cache["sa_v"].shape[1:])
+
+    def group_body(x, scanned):
+        (sa, ca), k_g, v_g = scanned
+
+        def inner(x, sc):
+            lp, k1, v1 = sc
+            x, k1, v1 = L.decode_attention(lp["attn"], cfg, x, k1, v1, pos)
+            x = L.swiglu(lp["mlp"], x, shd)
+            return x, (k1, v1)
+
+        x, (k_g, v_g) = jax.lax.scan(inner, x, (sa, k_g, v_g))
+        x = _apply_ca(ca, cfg, x, vis, shd)
+        return x, (k_g, v_g)
+
+    x, (nk, nv) = jax.lax.scan(
+        group_body, x, ((sa_grouped, params["ca_blocks"]), ck, cv))
+    new_cache = dict(cache)
+    new_cache["sa_k"] = nk.reshape(cache["sa_k"].shape)
+    new_cache["sa_v"] = nv.reshape(cache["sa_v"].shape)
+    if tail:
+        def inner(x, sc):
+            lp, k1, v1 = sc
+            x, k1, v1 = L.decode_attention(lp["attn"], cfg, x, k1, v1, pos)
+            x = L.swiglu(lp["mlp"], x, shd)
+            return x, (k1, v1)
+        x, (tk, tv) = jax.lax.scan(
+            inner, x, (params["tail_blocks"], cache["tail_k"], cache["tail_v"]))
+        new_cache["tail_k"], new_cache["tail_v"] = tk, tv
+    return L.logits(params["embed"], cfg, x, shd), new_cache
+
+
+def prefill(params, cfg, tokens, vision_emb, cache, shd: ShardCtx = NO_SHARD):
+    """Simplified prefill: parallel forward for logits; caches refilled by the
+    serving engine via decode replay when needed (documented trade-off)."""
+    vis = vision_emb.astype(params["vision_proj"].dtype) @ params["vision_proj"]
+    cache = dict(cache)
+    cache["vis"] = vis.astype(cache["vis"].dtype)
+    lg = forward(params, cfg, tokens, vision_emb, shd, last_only=True)
+    return lg, cache
+
+
+def cache_axes(cfg) -> dict:
+    _, tail = group_counts(cfg)
+    attn = ("layers", "batch", None, "kv_heads", None)
+    return {"sa_k": attn, "sa_v": attn,
+            "tail_k": attn if tail else None,
+            "tail_v": attn if tail else None,
+            "vis": ("batch", None, None)}

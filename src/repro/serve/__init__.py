@@ -1,0 +1,6 @@
+"""repro.serve — batched serving substrate."""
+from .serve_step import ServeFns, build_decode_step, build_prefill
+from .engine import Request, ServingEngine
+
+__all__ = ["ServeFns", "build_decode_step", "build_prefill",
+           "Request", "ServingEngine"]

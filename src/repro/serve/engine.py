@@ -1,0 +1,117 @@
+"""Continuous-batching serving engine.
+
+A fixed pool of B sequence slots runs one fused decode step per tick; requests
+are admitted into free slots as others finish (continuous batching — the
+serving pattern the decode_32k cell's step function is built for).  Prompt
+ingestion replays prompt tokens through the same decode step, so one compiled
+executable serves both phases (no second program; prefill_32k exists for the
+bulk-prompt path).
+
+Greedy sampling; per-request max_new_tokens; deterministic given (params,
+prompts).  Slot bookkeeping is host-side numpy; the device state is just
+(cache, tokens, pos) — checkpointable like everything else.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import api
+from .serve_step import ServeFns, build_decode_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, mesh, batch_slots: int, max_seq: int,
+                 params, fns: ServeFns | None = None):
+        self.cfg = cfg
+        self.B, self.max_seq = batch_slots, max_seq
+        self.fns = fns or build_decode_step(cfg, mesh, batch_slots, max_seq)
+        self.params = jax.device_put(params, self.fns.param_shardings)
+        self.cache = jax.device_put(api.init_cache(cfg, batch_slots, max_seq),
+                                    self.fns.cache_shardings)
+        self.queue: list[Request] = []
+        self.slots: list[Request | None] = [None] * batch_slots
+        # Per-slot host state.
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.pending = [[] for _ in range(batch_slots)]   # prompt tokens left
+        self.next_tok = np.zeros(batch_slots, np.int32)
+        self.ticks = 0
+        self.tokens_out = 0
+
+    # -- public ---------------------------------------------------------------
+    def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
+        req = Request(len(self.queue), list(prompt), max_new_tokens)
+        self.queue.append(req)
+        return req
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        finished: list[Request] = []
+        while (any(not r.done for r in self.queue)) and self.ticks < max_ticks:
+            self._admit()
+            self._tick()
+        return self.queue
+
+    def occupancy(self) -> float:
+        return sum(s is not None for s in self.slots) / self.B
+
+    # -- internals --------------------------------------------------------------
+    def _admit(self) -> None:
+        waiting = [r for r in self.queue
+                   if not r.done and r not in self.slots]
+        for i in range(self.B):
+            if self.slots[i] is None and waiting:
+                req = waiting.pop(0)
+                self.slots[i] = req
+                self.pos[i] = 0
+                self.pending[i] = list(req.prompt)
+                self.next_tok[i] = self.pending[i].pop(0)
+                self._reset_slot(i)
+
+    def _reset_slot(self, i: int) -> None:
+        """Zero slot i's recurrent state (KV rows are masked by position, but
+        SSM states carry over).  Convention: batch axis is 1 for rank≥3 cache
+        leaves ((L,B,...) stacked), 0 for rank≤2."""
+
+        def z(a):
+            if a.ndim >= 3:
+                return a.at[:, i].set(0)
+            return a.at[i].set(0) if a.ndim >= 1 else a
+
+        self.cache = jax.tree.map(z, self.cache)
+
+    def _tick(self) -> None:
+        # Feed: prompt token if any pending, else the last generated token.
+        toks = jnp.asarray(self.next_tok[:, None])
+        pos = jnp.asarray(self.pos)
+        nxt, self.cache = self.fns.decode(self.params, self.cache, toks, pos)
+        nxt = np.asarray(nxt)
+        self.ticks += 1
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            if self.pending[i]:                       # still ingesting prompt
+                self.next_tok[i] = self.pending[i].pop(0)
+                continue
+            req.out.append(int(nxt[i]))
+            self.tokens_out += 1
+            self.next_tok[i] = int(nxt[i])
+            if (len(req.out) >= req.max_new_tokens
+                    or self.pos[i] >= self.max_seq - 1):
+                req.done = True
+                self.slots[i] = None                  # slot freed; cache rows
+                # are overwritten by the next admit (pos resets to 0).

@@ -1,0 +1,145 @@
+"""pjit serve-step builders: prefill + batched decode with sharded KV caches.
+
+`build_decode_step` / `build_prefill` mirror train_step.py's pattern: jitted
+functions plus the shardings they were built against, so both the serving
+engine and the dry-run use identical artifacts.
+
+Cache shardings come from each family's `cache_axes` (batch over DP, kv-heads/
+ssm-heads over TP with divisibility fallback).  decode_32k / long_500k lower
+exactly these functions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import api
+from ..models.common import (Rules, ShardCtx, abstract_params, default_rules,
+                             param_pspecs, resolve_pspec)
+
+
+@dataclass
+class ServeFns:
+    decode: Callable | None
+    prefill: Callable | None
+    params_abstract: Any
+    cache_abstract: Any
+    param_shardings: Any
+    cache_shardings: Any
+    rules: Rules
+    mesh: Mesh
+
+
+def cache_shardings(cfg: ArchConfig, batch: int, max_seq: int,
+                    rules: Rules, mesh: Mesh):
+    m = api.family_module(cfg)
+    axes_tree = m.cache_axes(cfg)
+    cache_abs = jax.eval_shape(lambda: api.init_cache(cfg, batch, max_seq))
+
+    def resolve(abs_leaf, axes):
+        axes = list(axes)
+        spec = resolve_pspec(abs_leaf.shape, tuple(axes), rules, mesh)
+        # Flash-decoding fallback: if the KV-heads dim could not take the TP
+        # axis (e.g. 8 kv heads on a 16-way model axis), shard the cache's
+        # SEQUENCE dim instead — attention contracts over it, so XLA emits the
+        # partial-attention + reduce pattern.  Without this, a 32k cache
+        # replicates over the model axis and blows HBM (decode_32k: 42 GB/dev).
+        if (len(axes) == 5 and "kv_heads" in axes
+                and ("model" not in jax.tree.leaves(tuple(spec)))):
+            seq_dim = 2
+            if abs_leaf.shape[seq_dim] % mesh.shape["model"] == 0:
+                new = list(spec) + [None] * (5 - len(spec))
+                new[seq_dim] = "model"
+                spec = type(spec)(*new)
+        return NamedSharding(mesh, spec)
+
+    sh = jax.tree.map(resolve, cache_abs, axes_tree,
+                      is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return cache_abs, sh
+
+
+def build_decode_step(cfg: ArchConfig, mesh: Mesh, batch: int, max_seq: int,
+                      rules: Rules | None = None) -> ServeFns:
+    if rules is None:
+        rules = default_rules(mesh)
+        if cfg.sharding_hints:
+            rules = rules.override(**dict(cfg.sharding_hints))
+    if cfg.family == "moe":
+        # Decode is weight-movement-bound: FSDP-sharding the expert
+        # CONTRACTION dim (embed) makes XLA all-gather the expert weights
+        # every layer.  Shard the expert hidden dim over 'data' instead —
+        # weights stay put, only the (tiny) decode activations reshard.
+        # (§Perf kimi-k2 decode iteration.)
+        rules = rules.override(embed=None, expert_ffn="data")
+    shd = ShardCtx(mesh, rules)
+    layout = api.layout(cfg)
+    pspecs = param_pspecs(layout, rules, mesh)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    cache_abs, cache_sh = cache_shardings(cfg, batch, max_seq, rules, mesh)
+    import math
+    dp_size = math.prod(mesh.shape[a] for a in rules.dp_axes)
+    dp = rules.dp_axes if batch % dp_size == 0 else None
+    tok_sh = NamedSharding(mesh, P(dp, None))
+    pos_sh = NamedSharding(mesh, P(dp))
+
+    def decode(params, cache, tokens, pos):
+        lg, cache = api.decode_step(params, cfg, cache,
+                                    {"tokens": tokens}, pos, shd)
+        # Greedy sampling on-device: serving returns token ids, not logits.
+        next_tok = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    jitted = jax.jit(
+        decode,
+        in_shardings=(param_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(pos_sh, cache_sh),
+        donate_argnums=(1,),
+    )
+    return ServeFns(decode=jitted, prefill=None,
+                    params_abstract=abstract_params(layout),
+                    cache_abstract=cache_abs, param_shardings=param_sh,
+                    cache_shardings=cache_sh, rules=rules, mesh=mesh)
+
+
+def build_prefill(cfg: ArchConfig, mesh: Mesh, batch_abstract: dict,
+                  rules: Rules | None = None) -> ServeFns:
+    """Prefill = full forward over the prompt; returns last-position logits.
+
+    For attention families this also fills the KV cache; the dry-run cell
+    `prefill_32k` lowers exactly this function.
+    """
+    if rules is None:
+        rules = default_rules(mesh)
+        if cfg.sharding_hints:
+            rules = rules.override(**dict(cfg.sharding_hints))
+    shd = ShardCtx(mesh, rules)
+    layout = api.layout(cfg)
+    pspecs = param_pspecs(layout, rules, mesh)
+    param_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    import math
+    dp_size = math.prod(mesh.shape[a] for a in rules.dp_axes)
+    batch_sh = {}
+    for k, v in batch_abstract.items():
+        dp = rules.dp_axes if v.shape[0] % dp_size == 0 else None
+        batch_sh[k] = NamedSharding(
+            mesh, P(*([dp] + [None] * (len(v.shape) - 1))))
+
+    def prefill_fn(params, batch):
+        # last_only: full-sequence logits are never materialized (a 67 GB
+        # fp32 tensor for seamless at 32k before this — §Perf iteration).
+        logits, _ = api.forward(params, cfg, batch, shd, last_only=True)
+        return logits[:, -1]
+
+    jitted = jax.jit(prefill_fn, in_shardings=(param_sh, batch_sh),
+                     out_shardings=None)
+    return ServeFns(decode=None, prefill=jitted,
+                    params_abstract=abstract_params(layout),
+                    cache_abstract=None, param_shardings=param_sh,
+                    cache_shardings=None, rules=rules, mesh=mesh)

@@ -1,0 +1,4 @@
+"""repro.train — training loop substrate."""
+from .train_step import StepFns, build_train_step, loss_fn
+
+__all__ = ["StepFns", "build_train_step", "loss_fn"]

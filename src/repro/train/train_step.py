@@ -1,0 +1,145 @@
+"""pjit train-step builder: loss, microbatch accumulation, optimizer, shardings.
+
+`build_train_step(cfg, mesh, batch_abstract, ...)` returns a StepFns bundle:
+  * jitted `step(params, opt_state, batch) -> (params, opt_state, metrics)`,
+  * the in/out shardings it was built with (the dry-run lowers against these),
+  * abstract params/opt-state (ShapeDtypeStruct — no allocation).
+
+Sharding strategy (the §Perf baseline; hillclimbs swap the Rules table):
+  DP over ("pod","data"), FSDP weight sharding over "data", TP over "model",
+  optional sequence-parallel activations, optional int8 optimizer states.
+Microbatching: the global batch splits into `n_micro` scanned slices with
+fp32 gradient accumulation — the standard memory/throughput lever at scale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import api
+from ..models.common import (Rules, ShardCtx, abstract_params, default_rules,
+                             param_pspecs)
+from ..optim import adamw
+from ..optim.schedule import warmup_cosine
+
+
+@dataclass
+class StepFns:
+    step: Callable                    # jitted (params, opt, batch) -> ...
+    params_abstract: Any
+    opt_abstract: Any
+    param_shardings: Any
+    opt_shardings: Any
+    batch_shardings: Any
+    layout: Any
+    rules: Rules
+    mesh: Mesh
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, shd: ShardCtx):
+    logits, aux = api.forward(params, cfg, batch, shd)
+    lg32 = logits.astype(jnp.float32)
+    # Cross-entropy WITHOUT gathering the vocab axis: take_along_axis on a
+    # vocab-sharded logits tensor makes XLA all-gather (B,S,V) fp32 per step.
+    # logsumexp and the one-hot contraction are both vocab-local reductions,
+    # so the sharded axis never re-materializes (EXPERIMENTS.md §Perf).
+    lse = jax.nn.logsumexp(lg32, axis=-1)                        # (B,S)
+    onehot = jax.nn.one_hot(batch["labels"], lg32.shape[-1], dtype=lg32.dtype)
+    ll = jnp.einsum("bsv,bsv->bs", lg32, onehot)
+    loss = (lse - ll).mean()
+    # z-loss keeps the softmax normalizer bounded (production stability trick).
+    zloss = 1e-4 * jnp.mean(lse ** 2)
+    total = loss + zloss + 0.01 * aux.get("aux_loss", 0.0)
+    metrics = {"loss": loss, "zloss": zloss}
+    if "expert_load" in aux:
+        metrics["expert_load"] = aux["expert_load"].astype(jnp.float32)
+    return total, metrics
+
+
+def batch_shardings(batch_abstract: dict, rules: Rules, mesh: Mesh) -> dict:
+    """Every batch input shards on its leading (global-batch) axis over DP
+    (replicated when the batch doesn't divide — e.g. long_500k's batch of 1)."""
+    import math
+    dp_size = math.prod(mesh.shape[a] for a in rules.dp_axes)
+    out = {}
+    for k, v in batch_abstract.items():
+        lead = rules.dp_axes if v.shape[0] % dp_size == 0 else None
+        spec = [lead] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    batch_abstract: dict,
+    rules: Rules | None = None,
+    opt_cfg: adamw.AdamWConfig | None = None,
+    n_micro: int = 1,
+    total_steps: int = 10_000,
+    warmup_steps: int = 200,
+    donate: bool = True,
+) -> StepFns:
+    if rules is None:
+        rules = default_rules(mesh)
+        if cfg.sharding_hints:
+            rules = rules.override(**dict(cfg.sharding_hints))
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    shd = ShardCtx(mesh, rules)
+    layout = api.layout(cfg)
+    pspecs = param_pspecs(layout, rules, mesh)
+    params_abs = abstract_params(layout)
+    opt_abs = adamw.init_abstract(params_abs, opt_cfg)
+    opt_specs = adamw.state_pspecs(params_abs, pspecs, opt_cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, shd), has_aux=True)(params)
+
+    def step(params, opt_state, batch):
+        if n_micro == 1:
+            (_, metrics), grads = grads_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                    *x.shape[1:]), batch)
+
+            def acc_body(g_acc, mb_i):
+                (_, m), g = grads_of(params, mb_i)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return g_acc, m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(acc_body, g0, mb)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            metrics = jax.tree.map(lambda m: m.mean(0) if m.ndim else m, ms)
+
+        lr_scale = warmup_cosine(opt_state["step"], warmup=warmup_steps,
+                                 total=total_steps)
+        params, opt_state, opt_metrics = adamw.apply(
+            params, opt_state, grads, opt_cfg, lr_scale)
+        metrics = {**metrics, **opt_metrics, "lr_scale": lr_scale}
+        return params, opt_state, metrics
+
+    to_sh = lambda specs: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    param_sh, opt_sh = to_sh(pspecs), to_sh(opt_specs)
+    batch_sh = batch_shardings(batch_abstract, rules, mesh)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return StepFns(step=jitted, params_abstract=params_abs, opt_abstract=opt_abs,
+                   param_shardings=param_sh, opt_shardings=opt_sh,
+                   batch_shardings=batch_sh, layout=layout, rules=rules,
+                   mesh=mesh)

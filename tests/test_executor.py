@@ -1,0 +1,146 @@
+"""Distributed executor vs numpy reference join — 8 virtual devices."""
+import numpy as np
+import pytest
+import jax
+
+from repro.core import (canonical, plan_no_skew, plan_skew_join,
+                        reference_join, running_example, two_way)
+from repro.core.executor import ExecutorConfig, ShardedJoinExecutor
+from repro.data import skewed_join_dataset
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 virtual devices")
+
+
+def _mesh():
+    return jax.make_mesh((8,), ("cells",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def _run(query, data, cfg=None, skew=True, **plan_kw):
+    plan = (plan_skew_join if skew else plan_no_skew)(query, data, 8, **plan_kw)
+    ex = ShardedJoinExecutor(plan, _mesh(),
+                             config=cfg or ExecutorConfig(out_capacity=65536))
+    got = ex.result_rows(data)
+    expect = reference_join(query, data)
+    np.testing.assert_array_equal(canonical(got), expect)
+    return plan, ex
+
+
+def test_two_way_uniform():
+    q = two_way()
+    data = skewed_join_dataset(q, 400, 50, seed=1)
+    _run(q, data)
+
+
+def test_two_way_skewed_one_hh():
+    q = two_way()
+    data = skewed_join_dataset(q, 600, 40, skew={"B": 1.9}, seed=2)
+    plan, _ = _run(q, data)
+    assert plan.hhs.total() >= 1     # the skew really exercised the HH path
+
+
+def test_two_way_extreme_skew_all_same_key():
+    """Every tuple shares one join value — the pure Example 1.2 regime."""
+    q = two_way()
+    rng = np.random.default_rng(3)
+    data = {
+        "R": np.stack([rng.integers(0, 100, 300), np.full(300, 7)], axis=1),
+        "S": np.stack([np.full(80, 7), rng.integers(0, 100, 80)], axis=1),
+    }
+    cfg = ExecutorConfig(out_capacity=300 * 80 + 64)
+    plan, ex = _run(q, data, cfg=cfg)
+    # The HH residual must dominate the plan and split both sides.
+    hh_res = [rp for rp in plan.residuals if not rp.residual.combo.is_ordinary()]
+    assert hh_res and hh_res[0].k_i > 1
+
+
+def test_three_way_running_example():
+    q = running_example()
+    data = skewed_join_dataset(q, 100, 50, skew={"B": 1.5, "C": 1.2}, seed=4)
+    _run(q, data, cfg=ExecutorConfig(out_capacity=32768), max_hh_per_attr=3)
+
+
+def test_no_skew_plan_also_correct():
+    q = two_way()
+    data = skewed_join_dataset(q, 500, 64, seed=5)
+    _run(q, data, skew=False)
+
+
+def test_overflow_detection():
+    """Tiny capacity must be detected, not silently wrong."""
+    q = two_way()
+    data = skewed_join_dataset(q, 600, 10, skew={"B": 1.9}, seed=6)
+    plan = plan_skew_join(q, data, 8)
+    ex = ShardedJoinExecutor(plan, _mesh(), config=ExecutorConfig(out_capacity=4))
+    with pytest.raises(RuntimeError, match="capacity overflow"):
+        ex.result_rows(data)
+
+
+def test_jnp_ref_path_matches_kernel_path():
+    q = two_way()
+    data = skewed_join_dataset(q, 300, 30, skew={"B": 1.5}, seed=7)
+    plan = plan_skew_join(q, data, 8)
+    rows_k = ShardedJoinExecutor(
+        plan, _mesh(), config=ExecutorConfig(out_capacity=8192, use_kernels=True)
+    ).result_rows(data)
+    rows_j = ShardedJoinExecutor(
+        plan, _mesh(), config=ExecutorConfig(out_capacity=8192, use_kernels=False)
+    ).result_rows(data)
+    np.testing.assert_array_equal(canonical(rows_k), canonical(rows_j))
+
+
+def test_shuffle_balance_metric():
+    """Received-tuple counts per device are balanced under skew."""
+    q = two_way()
+    data = skewed_join_dataset(q, 2000, 100, skew={"B": 1.8}, seed=8)
+    plan = plan_skew_join(q, data, 8)
+    ex = ShardedJoinExecutor(plan, _mesh(),
+                             config=ExecutorConfig(out_capacity=65536))
+    res = ex.run(data)
+    recv = res["recv_counts"].astype(float)
+    used = recv[recv > 0]
+    assert used.max() <= 5.0 * max(used.mean(), 1.0)
+
+
+def test_four_relation_chain_join():
+    """Chain query R(A,B) ⋈ S(B,C) ⋈ T(C,D) ⋈ U(D,E) with skew on B and D."""
+    from repro.core import JoinQuery, Relation
+    q = JoinQuery((Relation("R", ("A", "B")), Relation("S", ("B", "C")),
+                   Relation("T", ("C", "D")), Relation("U", ("D", "E"))))
+    data = skewed_join_dataset(q, 80, 40, skew={"B": 1.5, "D": 1.4}, seed=9)
+    _run(q, data, cfg=ExecutorConfig(out_capacity=32768), max_hh_per_attr=2)
+
+
+def test_no_heavy_hitters_degenerates_to_plain_shares():
+    """Uniform data: the plan must be a single ordinary residual."""
+    q = two_way()
+    data = skewed_join_dataset(q, 400, 4000, seed=10)   # huge domain, no HH
+    plan = plan_skew_join(q, data, 8)
+    assert len(plan.residuals) == 1
+    assert plan.residuals[0].residual.combo.is_ordinary()
+    _run(q, data)
+
+
+def test_empty_relation():
+    q = two_way()
+    data = {"R": np.zeros((0, 2), np.int64),
+            "S": np.stack([np.arange(50), np.arange(50)], axis=1)}
+    plan = plan_skew_join(q, data, 8)
+    ex = ShardedJoinExecutor(plan, _mesh(),
+                             config=ExecutorConfig(out_capacity=64))
+    rows = ex.result_rows(data)
+    assert len(rows) == 0
+
+
+def test_disjoint_domains_empty_output():
+    q = two_way()
+    rng = np.random.default_rng(11)
+    data = {"R": np.stack([rng.integers(0, 50, 100),
+                           rng.integers(0, 50, 100)], axis=1),
+            "S": np.stack([rng.integers(100, 150, 100),
+                           rng.integers(100, 150, 100)], axis=1)}
+    plan = plan_skew_join(q, data, 8)
+    ex = ShardedJoinExecutor(plan, _mesh(),
+                             config=ExecutorConfig(out_capacity=64))
+    assert len(ex.result_rows(data)) == 0

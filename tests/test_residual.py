@@ -1,0 +1,128 @@
+"""Residual-join decomposition: paper Examples 3.1, 3.2, 5.2 verbatim."""
+import numpy as np
+import pytest
+
+from repro.core import (HHSet, TypeCombination, cost_expression, decompose,
+                        enumerate_combinations, residual_sizes, running_example,
+                        tuple_mask, two_way)
+
+# Running example: J = R(A,B) ⋈ S(B,E,C) ⋈ T(C,D);
+# HHs: B ∈ {b1, b2}, C ∈ {c1}  (we use b1=101, b2=102, c1=201).
+B1, B2, C1 = 101, 102, 201
+HHS = HHSet({"A": (), "B": (B1, B2), "C": (C1,), "D": (), "E": ()})
+
+
+def _expr_str(combo_assign):
+    q = running_example()
+    combo = TypeCombination.make(combo_assign)
+    return str(cost_expression(q, frozen=combo.frozen_attrs))
+
+
+def test_example_3_1_six_residual_joins():
+    combos = enumerate_combinations(HHS)
+    assert len(combos) == 6        # 3 types for B × 2 types for C
+    # Ordinary-only combination is enumerated first.
+    assert combos[0].is_ordinary()
+    assert {c.as_dict.get("B") for c in combos} == {None, B1, B2}
+    assert {c.as_dict.get("C") for c in combos} == {None, C1}
+
+
+def test_example_5_2_cost_expressions():
+    """The six simplified expressions, in the paper's order and notation."""
+    # 1. all ordinary: a=d=e=1 (A≺B, D≺C, E≺B) -> rc + s + tb
+    assert _expr_str({}) == "rc + s + tb"
+    # 2./3. B = HH: b=1, then d=1 (D≺C) and e=1 (E≺C) -> rc + sa + ta
+    assert _expr_str({"B": B1}) == "rc + sa + ta"
+    assert _expr_str({"B": B2}) == "rc + sa + ta"
+    # 4. C = HH: c=1, a=1 (A≺B), e=1 (E≺B) -> rd + sd + tb
+    assert _expr_str({"C": C1}) == "rd + sd + tb"
+    # 5./6. B and C both HH: b=c=1, no free dominance -> rde + sad + tae
+    assert _expr_str({"B": B1, "C": C1}) == "rde + sad + tae"
+    assert _expr_str({"B": B2, "C": C1}) == "rde + sad + tae"
+
+
+def test_raw_cost_expression_before_simplification():
+    # §2: rcde + sad + tabe (original expression, no dominance).
+    q = running_example()
+    assert str(cost_expression(q, apply_dominance=False)) == "rcde + sad + tabe"
+
+
+def _toy_data():
+    # R(A,B), S(B,E,C), T(C,D) with controlled HH placement.
+    R = np.array([[1, B1], [2, B2], [3, 5], [4, 6]])
+    S = np.array([[B1, 7, C1], [B1, 8, 9], [5, 7, C1], [5, 7, 9], [B2, 7, 9]])
+    T = np.array([[C1, 1], [9, 2], [9, 3]])
+    return {"R": R, "S": S, "T": T}
+
+
+def test_example_3_2_tuple_dispatch():
+    """Tuples of R go to residuals per their B value (paper's three dispatch rules)."""
+    data = _toy_data()
+    combos = enumerate_combinations(HHS)
+    by_assign = {tuple(sorted(c.as_dict.items())): c for c in combos}
+    rel_attrs = ("A", "B")
+
+    def residuals_of(row):
+        out = []
+        for c in combos:
+            if tuple_mask(rel_attrs, row[None, :], c, HHS)[0]:
+                out.append(tuple(sorted(c.as_dict.items())))
+        return set(out)
+
+    # t with B=b1 -> items (2) and (5): combos {B:b1} and {B:b1, C:c1}.
+    assert residuals_of(np.array([1, B1])) == {(("B", B1),), (("B", B1), ("C", C1))}
+    # t with ordinary B -> items (1) and (4): {} and {C:c1}.
+    assert residuals_of(np.array([3, 5])) == {(), (("C", C1),)}
+    # t with B=b2 -> items (3) and (6).
+    assert residuals_of(np.array([2, B2])) == {(("B", B2),), (("B", B2), ("C", C1))}
+
+
+def test_residual_sizes_restrict_correctly():
+    """§3 item 1: sizes count only tuples matching the combination's constraints."""
+    data = _toy_data()
+    combos = enumerate_combinations(HHS)
+    ordinary = combos[0]
+    sz = residual_sizes(data, running_example(), ordinary, HHS)
+    # R: B∉{b1,b2} -> rows [3,5],[4,6];  S: B∉HH and C∉HH -> [5,7,9];  T: C≠c1 -> 2 rows.
+    assert sz == {"R": 2, "S": 1, "T": 2}
+    b1_combo = TypeCombination.make({"B": B1})
+    sz = residual_sizes(data, running_example(), b1_combo, HHS)
+    # R: B=b1 -> 1;  S: B=b1 and C ordinary -> [B1,8,9];  T: C≠c1 -> 2.
+    assert sz == {"R": 1, "S": 1, "T": 2}
+
+
+def test_residual_membership_count():
+    """A tuple matches exactly ∏_{X ∉ rel} |L_X| combinations (Example 3.2):
+    its own attributes pin one type each; absent attributes range over all
+    their types.  (Residuals partition the JOIN OUTPUT, not relation inputs.)"""
+    rng = np.random.default_rng(0)
+    data = {
+        "R": rng.integers(0, 10, size=(200, 2)),
+        "S": rng.integers(0, 10, size=(200, 3)),
+        "T": rng.integers(0, 10, size=(200, 2)),
+    }
+    hhs = HHSet({"A": (), "B": (3, 7), "C": (2,), "D": (), "E": ()})
+    q = running_example()
+    ntypes = {"B": 3, "C": 2}    # 2 HH + ordinary, 1 HH + ordinary
+    for rel in q.relations:
+        expected = 1
+        for a, n in ntypes.items():
+            if a not in rel.attrs:
+                expected *= n
+        total = np.zeros(len(data[rel.name]), dtype=int)
+        for c in enumerate_combinations(hhs):
+            total += tuple_mask(rel.attrs, data[rel.name], c, hhs).astype(int)
+        assert (total == expected).all()
+
+
+def test_decompose_drops_empty_residuals():
+    data = _toy_data()
+    q = running_example()
+    sizes = {c: residual_sizes(data, q, c, HHS) for c in enumerate_combinations(HHS)}
+    residuals = decompose(q, HHS, sizes)
+    for r in residuals:
+        assert all(rel.size > 0 for rel in r.query.relations)
+    # Combination {B:b2, C:c1} is empty in this data (no S row with B=b2, C=c1):
+    combos = {r.combo.as_dict.get("B") is not None and r.combo.as_dict.get("C") is not None
+              for r in residuals}
+    assert len(residuals) < 6
