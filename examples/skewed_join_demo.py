@@ -22,11 +22,11 @@ from repro.core import (canonical, plan_skew_join, reference_join,
                         running_example)
 from repro.core.executor import ExecutorConfig, ShardedJoinExecutor
 from repro.data import skewed_join_dataset
+from repro.launch.mesh import make_mesh_compat
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("cells",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((8,), ("cells",))
     # The paper's running 3-way example: R(A,B) ⋈ S(B,E,C) ⋈ T(C,D),
     # with heavy hitters on both B and C.
     query = running_example()

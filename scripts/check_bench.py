@@ -1,0 +1,64 @@
+"""Benchmark smoke check — the CI step that runs after pytest (scripts/ci.sh).
+
+Runs the executor-facing tables of benchmarks/run.py (executor_e2e,
+reduce_scaling, kernel_throughput) and FAILS (exit 1) if any row reports a
+capacity overflow or a non-exact join output — the two silent-wrongness modes
+of the fixed-capacity data plane.  Timing is reported but never judged: this
+is a correctness tripwire, not a perf gate.
+
+Usage:  PYTHONPATH=src python scripts/check_bench.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+sys.path.insert(0, os.path.join(_REPO, "benchmarks"))
+
+import run as bench  # noqa: E402  (benchmarks/run.py; sets XLA_FLAGS on import)
+
+
+def _derived(derived: str) -> dict[str, str]:
+    return dict(kv.split("=", 1) for kv in derived.split(";") if "=" in kv)
+
+
+def main() -> int:
+    print("name,us_per_call,derived")
+    bench.bench_executor_e2e()
+    bench.bench_reduce_scaling()
+    bench.bench_kernel_throughput()
+
+    failures: list[str] = []
+    if not any(name.startswith("executor_e2e/") and "skipped" not in name
+               for name, _, _ in bench.ROWS):
+        failures.append(
+            "executor_e2e never ran (needs 8 devices — check XLA_FLAGS "
+            "xla_force_host_platform_device_count); the e2e gate must not "
+            "silently no-op")
+    for name, _us, _d in bench.ROWS:
+        d = _derived(_d)
+        if name.startswith("executor_e2e/") and "skipped" not in name:
+            if d.get("exact") != "True":
+                failures.append(f"{name}: non-exact output ({_d})")
+            for key in ("shuffle_overflow", "join_overflow"):
+                if d.get(key, "0") != "0":
+                    failures.append(f"{name}: {key}={d[key]}")
+        if name.startswith("reduce_scaling/"):
+            if d.get("exact") != "True":
+                failures.append(f"{name}: sort-merge != dense baseline ({_d})")
+            if d.get("overflow", "0") != "0":
+                failures.append(f"{name}: overflow={d['overflow']}")
+
+    if failures:
+        print("\nBENCH CHECK FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"# bench check ok ({len(bench.ROWS)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify + benchmark smoke check (see ROADMAP.md).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_bench.py

@@ -16,9 +16,9 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 import sys
 sys.path.insert(0, "src")
 from repro.launch import hlo_analysis
+from repro.launch.mesh import make_mesh_compat
 
-mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh_compat((2, 16, 16), ("pod", "data", "model"))
 
 D, FF, H, KV, L, V, B, S = 5120, 17408, 40, 8, 40, 151936, 32, 4096
 HD = D // H
@@ -102,6 +102,8 @@ for unroll in (False, True):
         jax.ShapeDtypeStruct((B, S), jnp.int32),
         jax.ShapeDtypeStruct((B, S), jnp.int32)).compile()
     ca = comp.cost_analysis()
+    if isinstance(ca, list):       # older jax: one dict per device partition
+        ca = ca[0]
     txt = comp.as_text()
     terms = hlo_analysis.analyze(txt, pod_size=256)
     results[unroll] = (ca["flops"], terms)

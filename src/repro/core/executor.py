@@ -6,17 +6,29 @@ axis whose devices ARE the reducers:
   map     per-device: route each local tuple to its residual-join cells
           (multiply-shift hashes on non-HH attributes — the Pallas
           `hash_partition` kernel — plus static replication over the axes the
-          relation lacks, per Hypercube.route).
+          relation lacks, per Hypercube.route).  All residual routes of a
+          relation are fused into ONE pass: a single (n, total_fanout)
+          destination buffer and a single broadcast/tag of the rows, instead
+          of per-route concatenate chains.
   shuffle one fixed-capacity `all_to_all` per relation.  MapReduce shuffles are
-          ragged; TPU collectives are dense, so tuples are packed MoE-style
-          (sort by destination, position-in-group via searchsorted, scatter
-          with mode='drop').  The Shares plan is exactly what makes a small
-          static capacity sufficient — per-cell load is balanced by
+          ragged; TPU collectives are dense, so tuples are packed MoE-style by
+          COUNTING SORT: destinations are small ints in [0, k), so a row's slot
+          is its exclusive prefix count within its bucket (stable — arrival
+          order preserved) and the same prefix-sum matrix's last row is the
+          per-bucket histogram, yielding overflow counts with no extra pass.
+          No argsort.  The Shares plan is exactly what makes
+          a small static capacity sufficient — per-cell load is balanced by
           construction; overflow counters report when it wasn't.
-  reduce  per-device: local multiway join of whatever arrived.  Counting uses
-          the Pallas `match_counts` kernel; pair expansion is a static-shape
-          `jnp.nonzero(size=...)` over the match matrix (TPUs like sizing +
-          gather, not scatter).
+  reduce  per-device: local multiway SORT-MERGE join of whatever arrived.
+          Each cascade step dense-ranks the union of both fragments' join keys
+          (lexsort + the Pallas `segment_scan` kernel), sorts the right
+          fragment by group id, reads per-group run lengths with the Pallas
+          `run_lengths` kernel, and expands matches with a static-shape gather
+          driven by an exclusive prefix sum of per-left-row counts — reducer
+          work is O(n log n), never the O(n²) match matrix (kept as
+          `_local_join_dense` for benchmarks/tests), so the Shares load
+          guarantee translates into wall-clock (Beame–Koutris–Suciu's
+          near-linear reducer-local work requirement).
 
 Cells of every residual join live in one flat LOGICAL reducer space
 (Hypercube.offset, cumulative across residual blocks); physical placement wraps
@@ -37,7 +49,6 @@ many logical cells per device (see launch/mesh.py notes).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Mapping
 
@@ -47,6 +58,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..kernels import ops as kops
+from ..kernels.ref import run_lengths_ref, segment_scan_ref
+from ..launch.mesh import shard_map_compat
 from .hypercube import hash_seed
 from .plan import JoinQuery
 from .skewjoin import SkewJoinPlan
@@ -58,7 +71,7 @@ INVALID = -1
 class ExecutorConfig:
     capacity_factor: float = 2.0       # shuffle slack over the max observed load
     out_capacity: int = 4096           # per-cell join output rows (static)
-    use_kernels: bool = True           # hash/count via Pallas (else jnp ref path)
+    use_kernels: bool = True           # hash/scan via Pallas (else jnp ref path)
 
 
 @dataclass(frozen=True)
@@ -108,44 +121,94 @@ def _build_routes(plan: SkewJoinPlan) -> dict[str, list[_Route]]:
     return routes
 
 
-def _route_rows(rows: jnp.ndarray, route: _Route, use_kernels: bool
-                ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """(phys_dest (n·fanout,), rows_tagged (n·fanout, w+1)).
+# ---------------------------------------------------------------------------
+# Map phase
+# ---------------------------------------------------------------------------
 
-    Each routed copy gets its LOGICAL cell id appended as the last column —
-    the local-join key that makes shared physical cells exact.  phys dest =
-    logical % k; -1 marks non-members."""
-    n = rows.shape[0]
-    member = rows[:, 0] != INVALID
-    for col, val in route.eq_constraints:
-        member &= rows[:, col] == val
-    for col, vals in route.notin_constraints:
-        hit = jnp.zeros((n,), bool)
-        for v in vals:
-            hit |= rows[:, col] == v
-        member &= ~hit
-    if route.hashed and use_kernels:
-        # Fused Pallas router: one VMEM pass for all hashed attributes.
-        base = kops.route_cells(rows, route.hashed)
-    elif route.hashed:
-        from ..kernels.ref import route_cells_ref
-        base = route_cells_ref(rows, route.hashed)
-    else:
-        base = jnp.zeros((n,), jnp.int32)
-    reps = jnp.asarray(route.rep_strides, jnp.int32)        # (fanout,)
-    logical = base[:, None] + reps[None, :] + route.offset  # (n, fanout)
-    logical = jnp.where(member[:, None], logical, INVALID)
-    dest = jnp.where(member[:, None], logical % route.k, INVALID)
-    fanout = reps.shape[0]
-    rows_rep = jnp.broadcast_to(rows[:, None, :], (n, fanout, rows.shape[1]))
+def _route_relation(rows: jnp.ndarray, routes: list[_Route], use_kernels: bool
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Route one relation through ALL of its residual routes in a single pass.
+
+    Returns (phys_dest (n·F,), rows_tagged (n·F, w+1)) where F is the total
+    fanout over every route.  Per-route logical cells are assembled into one
+    (n, F) buffer; the rows are broadcast and tagged with their LOGICAL cell id
+    (last column — the local-join key that makes shared physical cells exact)
+    exactly once.  phys dest = logical % k; -1 marks non-members.
+    """
+    n, w = rows.shape
+    logical_cols, dest_cols = [], []
+    for route in routes:
+        member = rows[:, 0] != INVALID
+        for col, val in route.eq_constraints:
+            member &= rows[:, col] == val
+        for col, vals in route.notin_constraints:
+            hit = jnp.zeros((n,), bool)
+            for v in vals:
+                hit |= rows[:, col] == v
+            member &= ~hit
+        if route.hashed and use_kernels:
+            # Fused Pallas router: one VMEM pass for all hashed attributes.
+            base = kops.route_cells(rows, route.hashed)
+        elif route.hashed:
+            from ..kernels.ref import route_cells_ref
+            base = route_cells_ref(rows, route.hashed)
+        else:
+            base = jnp.zeros((n,), jnp.int32)
+        reps = jnp.asarray(route.rep_strides, jnp.int32)        # (fanout_r,)
+        logical = base[:, None] + reps[None, :] + route.offset  # (n, fanout_r)
+        logical = jnp.where(member[:, None], logical, INVALID)
+        logical_cols.append(logical)
+        dest_cols.append(jnp.where(member[:, None], logical % route.k, INVALID))
+    logical = jnp.concatenate(logical_cols, axis=1)             # (n, F)
+    dest = jnp.concatenate(dest_cols, axis=1)
+    fanout = logical.shape[1]
     tagged = jnp.concatenate(
-        [rows_rep, logical[:, :, None].astype(rows.dtype)], axis=-1)
-    return dest.reshape(-1), tagged.reshape(n * fanout, -1)
+        [jnp.broadcast_to(rows[:, None, :], (n, fanout, w)),
+         logical[:, :, None].astype(rows.dtype)], axis=-1)
+    return dest.reshape(-1), tagged.reshape(n * fanout, w + 1)
+
+
+# ---------------------------------------------------------------------------
+# Shuffle pack
+# ---------------------------------------------------------------------------
+
+# Beyond this many buckets the counting sort's O(m·k) one-hot prefix sum
+# outgrows the O(m log m) argsort pack, so _pack_buckets dispatches back.
+_COUNTING_SORT_MAX_K = 32
 
 
 def _pack_buckets(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int
                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Scatter (dest, rows) into a (k, cap, w) buffer; returns (buf, overflow)."""
+    """Counting-sort scatter of (dest, rows) into a (k, cap, w) buffer.
+
+    Destinations are small ints in [0, k), so no argsort is needed: a row's
+    slot within its bucket is its exclusive prefix count over that bucket
+    (stable — bucket contents keep arrival order, bit-identical to the
+    argsort pack), and the final row of the same prefix-sum matrix IS the
+    per-bucket histogram (`segment_histogram` semantics with no second pass),
+    which gives the overflow count directly.  The one-hot prefix sum is
+    O(m·k), so large meshes fall back to the argsort pack, which produces the
+    identical buffer.  Returns (buf, overflow)."""
+    if k > _COUNTING_SORT_MAX_K:
+        return _pack_buckets_argsort(dest, rows, k, cap)
+    m, w = rows.shape
+    d = jnp.where((dest >= 0) & (dest < k), dest.astype(jnp.int32),
+                  jnp.int32(k))                                  # invalid -> k
+    onehot = d[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]   # (m, k)
+    pos = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1   # excl. prefix count
+    pos_in = jnp.take_along_axis(pos, jnp.minimum(d, k - 1)[:, None],
+                                 axis=1)[:, 0]
+    hist = pos[-1] + 1 if m else jnp.zeros((k,), jnp.int32)  # bucket totals
+    overflow = jnp.maximum(hist - cap, 0).sum()
+    buf = jnp.full((k, cap, w), INVALID, dtype=rows.dtype)
+    buf = buf.at[d, pos_in].set(rows, mode="drop")   # d = k or pos_in ≥ cap -> dropped
+    return buf, overflow
+
+
+def _pack_buckets_argsort(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int
+                          ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-argsort pack — superseded by the counting sort in `_pack_buckets`;
+    kept as the equivalence oracle for tests."""
     m, w = rows.shape
     big = jnp.where(dest < 0, jnp.int32(k), dest.astype(jnp.int32))  # invalid last
     order = jnp.argsort(big, stable=True)
@@ -159,14 +222,48 @@ def _pack_buckets(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int
     return buf, overflow
 
 
+# ---------------------------------------------------------------------------
+# Reduce phase
+# ---------------------------------------------------------------------------
+
+def _lexsort_rows(keys: jnp.ndarray) -> jnp.ndarray:
+    """Stable lexicographic row order of a (n, w) key matrix (col 0 primary)."""
+    return jnp.lexsort(tuple(keys[:, j] for j in range(keys.shape[1] - 1, -1, -1)))
+
+
+def _group_ids(left_keys: jnp.ndarray, right_keys: jnp.ndarray,
+               use_kernels: bool) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense-rank the union of two key matrices: rows get equal group ids iff
+    their keys are equal (across or within sides)."""
+    n_l = left_keys.shape[0]
+    comb = jnp.concatenate([left_keys, right_keys], axis=0)
+    perm = _lexsort_rows(comb)
+    if use_kernels:
+        seg, _ = kops.segment_scan(comb[perm])
+    else:
+        seg, _ = segment_scan_ref(comb[perm])
+    g = jnp.zeros((comb.shape[0],), jnp.int32).at[perm].set(seg)
+    return g[:n_l], g[n_l:]
+
+
 def _local_join(frags: dict[str, jnp.ndarray], query: JoinQuery, cap_out: int,
                 use_kernels: bool) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Cascade natural join of one cell's fragments.
+    """Cascade natural join of one cell's fragments — sort-merge formulation.
 
-    Every fragment row carries its LOGICAL cell id as the last column; the
-    cascade joins on (shared named attributes AND equal logical cell), so a
-    physical cell hosting several logical cells computes each logical cell's
+    Every fragment row carries its LOGICAL cell id as the last column; each
+    cascade step joins on (shared named attributes AND equal logical cell), so
+    a physical cell hosting several logical cells computes each logical cell's
     join independently — structural exactness for wrapped residual blocks.
+
+    One step, with left = accumulator (n_l rows) and right = next fragment:
+      1. dense-rank the union of both sides' keys (lexsort + segment_scan),
+         with per-side sentinels on invalid rows so they never match;
+      2. stable-sort the right side by group id; per-group run lengths via the
+         `run_lengths` kernel give each left row its match count through ONE
+         searchsorted lookup;
+      3. expand to the static `cap_out` shape by gathering from the exclusive
+         prefix sum of per-left-row counts — output order is (left row, right
+         arrival order), bit-identical to the dense-matrix baseline.
 
     Returns (rows (cap_out, n_attrs), valid (cap_out,), overflow ())."""
     rels = list(query.relations)
@@ -180,21 +277,30 @@ def _local_join(frags: dict[str, jnp.ndarray], query: JoinQuery, cap_out: int,
         r_valid = right[:, -1] != INVALID
         shared = [(acc_attrs.index(a), right_attrs.index(a))
                   for a in right_attrs if a in acc_attrs]   # incl. __cell__
-        match = acc_valid[:, None] & r_valid[None, :]
-        for la, ra in shared:
-            match &= acc[:, la][:, None] == right[:, ra][None, :]
+        n_l, n_r = acc.shape[0], right.shape[0]
+        # Distinct per-side sentinels: invalid rows never match across sides.
+        lk = jnp.where(acc_valid[:, None],
+                       acc[:, jnp.asarray([l for l, _ in shared])], jnp.int32(-2))
+        rk = jnp.where(r_valid[:, None],
+                       right[:, jnp.asarray([r for _, r in shared])], jnp.int32(-3))
+        g_l, g_r = _group_ids(lk, rk, use_kernels)
+        order_r = jnp.argsort(g_r)                 # stable: arrival order kept
+        sg_r = g_r[order_r]
         if use_kernels:
-            # Pallas reduce-phase counting on the logical-cell key (distinct
-            # sentinels so pads never match); an upper bound on the full
-            # multi-attribute match count, kept in the hot path as the
-            # kernel-integration point and a debugging cross-check.
-            pk = jnp.where(acc_valid, acc[:, -1], -2)
-            bk = jnp.where(r_valid, right[:, -1], -1)
-            _cell_matches = kops.match_counts(pk, bk).sum()
-        n_match = match.sum()
+            _, _, rlen = kops.run_lengths(sg_r[:, None])
+        else:
+            _, _, rlen = run_lengths_ref(sg_r[:, None])
+        lo = jnp.searchsorted(sg_r, g_l)           # group start in sorted right
+        safe_lo = jnp.minimum(lo, n_r - 1)
+        hit = (lo < n_r) & (sg_r[safe_lo] == g_l)
+        counts = jnp.where(hit, rlen[safe_lo], 0)  # per-left-row match count
+        n_match = counts.sum()
         overflow = overflow + jnp.maximum(0, n_match - cap_out)
-        flat = jnp.nonzero(match.reshape(-1), size=cap_out, fill_value=0)[0]
-        li, ri = flat // right.shape[0], flat % right.shape[0]
+        off = jnp.cumsum(counts) - counts          # exclusive prefix sum
+        t = jnp.arange(cap_out, dtype=jnp.int32)
+        li = jnp.clip(jnp.searchsorted(off, t, side="right") - 1, 0, n_l - 1)
+        ri = order_r[jnp.clip(lo[li] + t - off[li], 0, n_r - 1)]
+        valid_out = t < n_match
         extra_names = [a for a in rel.attrs if a not in acc_attrs]
         extra_cols = [right_attrs.index(a) for a in extra_names]
         # Column layout: acc named attrs, new named attrs, __cell__ last.
@@ -202,6 +308,45 @@ def _local_join(frags: dict[str, jnp.ndarray], query: JoinQuery, cap_out: int,
         if extra_cols:
             pieces.append(right[ri][:, jnp.asarray(extra_cols)])
         pieces.append(acc[li][:, -1:])             # the (equal) cell id
+        new_rows = jnp.concatenate(pieces, axis=1)
+        acc_valid = valid_out
+        acc = jnp.where(acc_valid[:, None], new_rows, INVALID)
+        acc_attrs = acc_attrs[:-1] + extra_names + ["__cell__"]
+    order = [acc_attrs.index(a) for a in query.attributes]
+    return acc[:, jnp.asarray(order)], acc_valid, overflow
+
+
+def _local_join_dense(frags: dict[str, jnp.ndarray], query: JoinQuery,
+                      cap_out: int
+                      ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """O(n_l·n_r) match-matrix cascade — the superseded reduce phase, kept as
+    the exactness oracle and the `reduce_scaling` benchmark baseline.
+
+    Output (rows, valid, overflow) is bit-identical to `_local_join`."""
+    rels = list(query.relations)
+    acc = frags[rels[0].name]
+    acc_attrs = list(rels[0].attrs) + ["__cell__"]
+    acc_valid = acc[:, -1] != INVALID
+    overflow = jnp.int32(0)
+    for rel in rels[1:]:
+        right = frags[rel.name]
+        right_attrs = list(rel.attrs) + ["__cell__"]
+        r_valid = right[:, -1] != INVALID
+        shared = [(acc_attrs.index(a), right_attrs.index(a))
+                  for a in right_attrs if a in acc_attrs]
+        match = acc_valid[:, None] & r_valid[None, :]
+        for la, ra in shared:
+            match &= acc[:, la][:, None] == right[:, ra][None, :]
+        n_match = match.sum()
+        overflow = overflow + jnp.maximum(0, n_match - cap_out)
+        flat = jnp.nonzero(match.reshape(-1), size=cap_out, fill_value=0)[0]
+        li, ri = flat // right.shape[0], flat % right.shape[0]
+        extra_names = [a for a in rel.attrs if a not in acc_attrs]
+        extra_cols = [right_attrs.index(a) for a in extra_names]
+        pieces = [acc[li][:, :-1]]
+        if extra_cols:
+            pieces.append(right[ri][:, jnp.asarray(extra_cols)])
+        pieces.append(acc[li][:, -1:])
         new_rows = jnp.concatenate(pieces, axis=1)
         acc_valid = jnp.arange(cap_out) < n_match
         acc = jnp.where(acc_valid[:, None], new_rows, INVALID)
@@ -235,19 +380,19 @@ class ShardedJoinExecutor:
     def _capacity(self, rel_name: str, data: Mapping[str, np.ndarray]) -> int:
         """Static per-(src device, dest) bucket capacity from the plan's own
         routing — the Shares guarantee makes this small; slack covers hashing
-        variance."""
+        variance.  One routing pass over the whole relation; per-(device, dest)
+        maxima come from a single bincount over dev·k + dest."""
         k = self.plan.k
         sharded = self._shard(np.asarray(data[rel_name]))
-        per_dev = sharded.reshape(k, -1, sharded.shape[1])
+        per_dev = sharded.shape[0] // k
+        valid_idx = np.nonzero(sharded[:, 0] != INVALID)[0]
         worst = 1
-        for d in range(k):
-            rows = per_dev[d]
-            rows = rows[rows[:, 0] != INVALID]
-            if len(rows) == 0:
-                continue
-            _, dest = self.plan.route_relation(rel_name, rows)
+        if len(valid_idx):
+            ridx, dest = self.plan.route_relation(rel_name, sharded[valid_idx])
             if len(dest):
-                worst = max(worst, int(np.bincount(dest, minlength=k).max()))
+                dev = valid_idx[ridx] // per_dev
+                counts = np.bincount(dev * k + dest, minlength=k * k)
+                worst = max(worst, int(counts.max()))
         return int(np.ceil(worst * self.config.capacity_factor))
 
     # -- data plane ----------------------------------------------------------
@@ -276,13 +421,8 @@ class ShardedJoinExecutor:
             frags, sh_over = {}, jnp.int32(0)
             recv_count = jnp.int32(0)
             for rel in query.relations:
-                dests, rowss = [], []
-                for route in routes[rel.name]:
-                    d, rr = _route_rows(local[rel.name], route, cfg.use_kernels)
-                    dests.append(d)
-                    rowss.append(rr)
-                dest = jnp.concatenate(dests)
-                rows = jnp.concatenate(rowss)
+                dest, rows = _route_relation(local[rel.name], routes[rel.name],
+                                             cfg.use_kernels)
                 buf, over = _pack_buckets(dest, rows, k, caps[rel.name])
                 sh_over = sh_over + over
                 recv = jax.lax.all_to_all(buf, self.axis, split_axis=0,
@@ -298,8 +438,8 @@ class ShardedJoinExecutor:
         specs_in = tuple(P(self.axis) for _ in query.relations)
         specs_out = (P(self.axis), P(self.axis), P(self.axis), P(self.axis),
                      P(self.axis))
-        f = jax.shard_map(step, mesh=self.mesh, in_specs=specs_in,
-                          out_specs=specs_out, check_vma=False)
+        f = shard_map_compat(step, mesh=self.mesh, in_specs=specs_in,
+                             out_specs=specs_out)
         args = [jnp.asarray(sharded[r.name]) for r in query.relations]
         out, valid, sh_over, j_over, recv = jax.jit(f)(*args)
         return {

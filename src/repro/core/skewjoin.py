@@ -18,6 +18,7 @@ per-reducer load, which is what balances the reduce phase.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Mapping
 
@@ -97,6 +98,14 @@ class SkewJoinPlan:
         return loads
 
 
+# The greedy doubling below re-evaluates identical (expr, k_i) pairs every
+# round (the sort re-ranks ALL residuals each time one is doubled), and
+# plan_skew_join / plan_no_skew often share sub-expressions — so Shares
+# solutions are memoized process-wide.  CostExpression is a frozen dataclass
+# of tuples/frozensets, hence hashable; solutions are immutable in practice.
+_optimize_shares_cached = functools.lru_cache(maxsize=4096)(optimize_shares_expr)
+
+
 def _allocate_budget(residuals: list[ResidualJoin], k: int
                      ) -> list[tuple[ResidualJoin, int, SharesSolution]]:
     """Greedy-doubling allocation of k reducers across residual joins.
@@ -119,7 +128,8 @@ def _allocate_budget(residuals: list[ResidualJoin], k: int
             f"{n} residual joins vastly exceeds k={k} reducers; lower "
             f"max_hh_per_attr or raise the HH threshold")
     k_i = [1] * n
-    sols: list[SharesSolution] = [optimize_shares_expr(r.expr, 1) for r in residuals]
+    sols: list[SharesSolution] = [_optimize_shares_cached(r.expr, 1)
+                                  for r in residuals]
     while True:
         budget = k - sum(k_i)
         # Double the residual with the highest per-cell load that still fits.
@@ -128,7 +138,7 @@ def _allocate_budget(residuals: list[ResidualJoin], k: int
         for i in order:
             if k_i[i] > budget:
                 continue
-            nxt = optimize_shares_expr(residuals[i].expr, 2 * k_i[i])
+            nxt = _optimize_shares_cached(residuals[i].expr, 2 * k_i[i])
             if nxt.cost / (2 * k_i[i]) >= sols[i].cost / k_i[i] - 1e-12:
                 continue    # doubling doesn't reduce this block's per-cell load
             k_i[i] *= 2

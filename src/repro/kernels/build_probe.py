@@ -8,11 +8,21 @@ per-probe statistics.  TPU grids iterate the minor axis innermost and
 sequentially, so revisiting the same output tile across build blocks is a safe
 read-modify-write accumulation.
 
-Two primitives:
+Four primitives:
   * match_counts(probe, build)  — #build matches per probe row (join sizing /
                                   expansion offsets).
   * first_match(probe, build)   — index of first match or -1 (semi-join and
                                   dedup filters).
+  * segment_scan(keys)          — per-row segment ids + run-start offsets over
+                                  a lexicographically sorted key matrix (the
+                                  sort-merge reduce phase's grouping pass).
+  * run_lengths(keys)           — segment_scan plus per-row run lengths (two
+                                  scans: forward + reversed).
+
+The scan primitives carry their running (segment count, run start) across grid
+steps in a revisited (2,) output block — TPU grids iterate sequentially, so
+read-modify-write accumulation across steps is safe (same property the blocked
+match_counts accumulation relies on).
 
 Pair *expansion* (emitting the matched index lists) is deliberately left to
 XLA sort/cumsum — scatter-heavy code is not where TPUs win; sizing + gather is.
@@ -27,7 +37,9 @@ from jax.experimental import pallas as pl
 
 DEFAULT_PROBE_BLOCK = 512
 DEFAULT_BUILD_BLOCK = 512
+DEFAULT_SCAN_BLOCK = 2048
 _INT_MAX = 2**31 - 1
+_PAD_KEY = -(2**31)   # padding rows form their own run (data values are ≥ -3)
 
 
 def _match_counts_kernel(probe_ref, build_ref, out_ref):
@@ -52,6 +64,31 @@ def _first_match_kernel(probe_ref, build_ref, out_ref, *, build_block: int):
         out_ref[...] = jnp.full_like(out_ref, jnp.int32(_INT_MAX))
 
     out_ref[...] = jnp.minimum(out_ref[...], idx)
+
+
+def _seg_scan_kernel(keys_ref, prev_ref, seg_ref, start_ref, carry_ref, *,
+                     block: int):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        # [-1, 0] built from an iota (literal arrays would be captured consts;
+        # TPU requires ≥2D iota, hence the reshape).
+        carry_ref[...] = jnp.minimum(
+            jax.lax.broadcasted_iota(jnp.int32, (2, 1), 0).reshape(2), 1) - 1
+
+    keys = keys_ref[...]                                   # (block, w)
+    prev = prev_ref[...]                                   # keys shifted by one row
+    carry = carry_ref[...]                                 # [segs so far - 1, run start]
+    idx = (jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0).reshape(block)
+           + b * block)                                    # 2-D iota: TPU requires ≥2D
+    flags = jnp.any(keys != prev, axis=1) | (idx == 0)
+    seg = carry[0] + jnp.cumsum(flags.astype(jnp.int32))
+    run = jax.lax.cummax(jnp.where(flags, idx, jnp.int32(-1)), axis=0)
+    run = jnp.where(run < 0, carry[1], run)
+    seg_ref[...] = seg
+    start_ref[...] = run
+    carry_ref[...] = jnp.stack([seg[-1], run[-1]])
 
 
 def _pad(x: jnp.ndarray, block: int, fill: int) -> jnp.ndarray:
@@ -109,3 +146,58 @@ def first_match(probe: jnp.ndarray, build: jnp.ndarray, *,
     )(probe_p, build_p)
     out = out[:n]
     return jnp.where(out == _INT_MAX, jnp.int32(-1), out)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def segment_scan(keys: jnp.ndarray, *, block: int = DEFAULT_SCAN_BLOCK,
+                 interpret: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(seg_ids, run_start) over a lexicographically sorted key matrix (n, w).
+
+    seg_ids[i] is the dense rank of row i's key (0-based, increases by one at
+    every key change); run_start[i] is the index of the first row of the run
+    containing i.  Rows must be pre-sorted so equal keys are contiguous.
+    """
+    n, w = keys.shape
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32)
+    kp = jnp.pad(keys.astype(jnp.int32), ((0, -n % block), (0, 0)),
+                 constant_values=_PAD_KEY)
+    prev = jnp.concatenate([kp[:1], kp[:-1]], axis=0)
+    grid = (kp.shape[0] // block,)
+    seg, start, _ = pl.pallas_call(
+        functools.partial(_seg_scan_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, w), lambda i: (i, 0)),
+            pl.BlockSpec((block, w), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),        # revisited carry block
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((kp.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((kp.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((2,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(kp, prev)
+    return seg[:n], start[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def run_lengths(keys: jnp.ndarray, *, block: int = DEFAULT_SCAN_BLOCK,
+                interpret: bool = False
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(seg_ids, run_start, run_length) over sorted keys (n, w).
+
+    run_length[i] is the size of the run containing row i, obtained from a
+    second scan over the reversed keys: the reversed run start is the original
+    run *end*, so length = end - start + 1 with no per-segment scatter.
+    """
+    n = keys.shape[0]
+    seg, start = segment_scan(keys, block=block, interpret=interpret)
+    _, start_rev = segment_scan(keys[::-1], block=block, interpret=interpret)
+    end = (n - 1) - start_rev[::-1]
+    return seg, start, end - start + 1

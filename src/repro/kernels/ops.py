@@ -40,6 +40,18 @@ def first_match(probe: jnp.ndarray, build: jnp.ndarray,
                                    build_block=build_block, interpret=INTERPRET)
 
 
+def segment_scan(keys: jnp.ndarray,
+                 block: int = build_probe.DEFAULT_SCAN_BLOCK):
+    """(seg_ids, run_start) over sorted keys — see kernels/build_probe.py."""
+    return build_probe.segment_scan(keys, block=block, interpret=INTERPRET)
+
+
+def run_lengths(keys: jnp.ndarray,
+                block: int = build_probe.DEFAULT_SCAN_BLOCK):
+    """(seg_ids, run_start, run_length) — see kernels/build_probe.py."""
+    return build_probe.run_lengths(keys, block=block, interpret=INTERPRET)
+
+
 def segment_histogram(values: jnp.ndarray, n_bins: int,
                       block: int = _sh.DEFAULT_BLOCK):
     """Bounded-domain histogram — see kernels/segment_histogram.py."""

@@ -6,6 +6,7 @@ blocking, no tricks.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 # Knuth's multiplicative constant — must match core.hypercube._MULT.
@@ -42,6 +43,31 @@ def first_match_ref(probe: jnp.ndarray, build: jnp.ndarray) -> jnp.ndarray:
                     jnp.int32(2**31 - 1))
     m = idx.min(axis=1)
     return jnp.where(m == 2**31 - 1, jnp.int32(-1), m)
+
+
+def segment_scan_ref(keys: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(seg_ids, run_start) over lexicographically sorted keys (n, w).
+
+    seg_ids densely ranks equal-key runs; run_start[i] is the index of the
+    first row of the run containing row i.
+    """
+    n = keys.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    neq = jnp.any(keys[1:] != keys[:-1], axis=1)
+    flags = jnp.concatenate([jnp.ones((1,), bool), neq])
+    seg = jnp.cumsum(flags.astype(jnp.int32)) - 1
+    start = jax.lax.cummax(jnp.where(flags, idx, jnp.int32(-1)))
+    return seg, start
+
+
+def run_lengths_ref(keys: jnp.ndarray
+                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(seg_ids, run_start, run_length) over sorted keys (n, w)."""
+    seg, start = segment_scan_ref(keys)
+    counts = jnp.zeros((keys.shape[0],), jnp.int32).at[seg].add(1)
+    return seg, start, counts[seg]
 
 
 def segment_histogram_ref(values: jnp.ndarray, n_bins: int) -> jnp.ndarray:

@@ -2,7 +2,8 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
+
 
 from repro.kernels import ops, ref
 
@@ -105,6 +106,51 @@ def test_match_counts_property(np_, nb, dom, seed):
     assert out.sum() == expect_total
     np.testing.assert_array_equal(
         out, np.asarray(ref.match_counts_ref(jnp.asarray(probe), jnp.asarray(build))))
+
+
+def _sorted_keys(n, w, dom, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, dom, size=(n, w)).astype(np.int32)
+    return keys[np.lexsort(keys.T[::-1])]
+
+
+@pytest.mark.parametrize("n,w", [(1, 1), (7, 2), (2048, 2), (2049, 3), (5000, 1)])
+def test_segment_scan_matches_ref(n, w):
+    keys = _sorted_keys(n, w, max(n // 3, 2), n)
+    seg, start = ops.segment_scan(jnp.asarray(keys))
+    seg_r, start_r = ref.segment_scan_ref(jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(seg), np.asarray(seg_r))
+    np.testing.assert_array_equal(np.asarray(start), np.asarray(start_r))
+    # Independent numpy oracle: dense rank == np.unique inverse on sorted rows.
+    _, inv = np.unique(keys, axis=0, return_inverse=True)
+    np.testing.assert_array_equal(np.asarray(seg), inv)
+
+
+@pytest.mark.parametrize("n,w", [(1, 1), (17, 2), (2048, 1), (3000, 2)])
+def test_run_lengths_matches_ref(n, w):
+    keys = _sorted_keys(n, w, max(n // 4, 2), n + 1)
+    out = ops.run_lengths(jnp.asarray(keys))
+    expect = ref.run_lengths_ref(jnp.asarray(keys))
+    for got, want in zip(out, expect):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    _, inv, cnt = np.unique(keys, axis=0, return_inverse=True,
+                            return_counts=True)
+    np.testing.assert_array_equal(np.asarray(out[2]), cnt[inv])
+
+
+@pytest.mark.parametrize("case", ["all_equal", "all_distinct"])
+def test_run_lengths_edge_runs(case):
+    n = 300
+    keys = (np.zeros((n, 2)) if case == "all_equal"
+            else np.arange(2 * n).reshape(n, 2)).astype(np.int32)
+    seg, start, length = ops.run_lengths(jnp.asarray(keys))
+    if case == "all_equal":
+        assert int(seg.max()) == 0 and int(start.max()) == 0
+        assert (np.asarray(length) == n).all()
+    else:
+        np.testing.assert_array_equal(np.asarray(seg), np.arange(n))
+        np.testing.assert_array_equal(np.asarray(start), np.arange(n))
+        assert (np.asarray(length) == 1).all()
 
 
 @pytest.mark.parametrize("n,width", [(1, 2), (100, 3), (2048, 2), (5000, 5)])

@@ -2,7 +2,8 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
+
 
 from repro.core.moe_shares import (MoEDispatchPlan, dispatch_cost,
                                    plan_dispatch, route_tokens, shares_split)

@@ -3,7 +3,8 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
+
 
 from repro.core import (JoinQuery, Relation, brute_force_shares,
                         cost_expression, naive_hh_cost, optimize_shares,

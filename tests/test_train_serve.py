@@ -11,14 +11,14 @@ from repro.models import api, common as C
 from repro.optim import AdamWConfig
 from repro.serve import build_decode_step, build_prefill
 from repro.train import build_train_step
+from repro.launch.mesh import make_mesh_compat
 
 pytestmark = pytest.mark.skipif(
     len(jax.devices()) < 8, reason="needs 8 virtual devices")
 
 
 def _mesh():
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((2, 4), ("data", "model"))
 
 
 def _setup(name, **overrides):
