@@ -1,15 +1,17 @@
 """Benchmark smoke check — the CI step that runs after pytest (scripts/ci.sh).
 
 Runs the executor-facing tables of benchmarks/run.py (executor_e2e,
-reduce_scaling, kernel_throughput) and FAILS (exit 1) if any row reports a
-capacity overflow or a non-exact join output — the two silent-wrongness modes
-of the fixed-capacity data plane.  Timing is reported but never judged: this
-is a correctness tripwire, not a perf gate.
+reduce_scaling, shuffle_scaling, kernel_throughput) and FAILS (exit 1) if any
+row reports a capacity overflow or a non-exact output — the silent-wrongness
+modes of the fixed-capacity data plane — or if the shuffle_scaling table (or
+its BENCH_shuffle.json artifact) is missing entirely.  Timing is reported but
+never judged: this is a correctness tripwire, not a perf gate.
 
 Usage:  PYTHONPATH=src python scripts/check_bench.py
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 
@@ -25,9 +27,15 @@ def _derived(derived: str) -> dict[str, str]:
 
 
 def main() -> int:
+    # Delete the committed artifact first so the missing-artifact check below
+    # proves this run REGENERATED it (not that a stale copy existed).
+    stale = os.path.join(_REPO, "BENCH_shuffle.json")
+    if os.path.exists(stale):
+        os.remove(stale)
     print("name,us_per_call,derived")
     bench.bench_executor_e2e()
     bench.bench_reduce_scaling()
+    bench.bench_shuffle_scaling()
     bench.bench_kernel_throughput()
 
     failures: list[str] = []
@@ -50,6 +58,34 @@ def main() -> int:
                 failures.append(f"{name}: sort-merge != dense baseline ({_d})")
             if d.get("overflow", "0") != "0":
                 failures.append(f"{name}: overflow={d['overflow']}")
+        if name.startswith("shuffle_scaling/k="):
+            if d.get("exact") != "True":
+                failures.append(f"{name}: radix pack != oracle packs ({_d})")
+            if d.get("overflow", "0") != "0":
+                failures.append(f"{name}: overflow={d['overflow']}")
+        if name == "shuffle_scaling/session":
+            if d.get("exact") != "True":
+                failures.append(f"{name}: non-exact session output ({_d})")
+            if d.get("shuffle_overflow", "0") != "0":
+                failures.append(f"{name}: shuffle_overflow={d['shuffle_overflow']}")
+
+    # The shuffle table must exist — a silently skipped table must not pass.
+    if not any(n.startswith("shuffle_scaling/k=") for n, _, _ in bench.ROWS):
+        failures.append("shuffle_scaling table missing (pack sweep never ran)")
+    if not any(n == "shuffle_scaling/session" for n, _, _ in bench.ROWS):
+        failures.append(
+            "shuffle_scaling/session missing (needs 8 devices — check "
+            "XLA_FLAGS xla_force_host_platform_device_count)")
+    json_path = os.path.join(_REPO, "BENCH_shuffle.json")
+    if not os.path.exists(json_path):
+        failures.append(f"missing artifact {json_path}")
+    else:
+        report = json.load(open(json_path))
+        if not report.get("pack") or not all(
+                e.get("exact") for e in report["pack"]):
+            failures.append("BENCH_shuffle.json: empty or non-exact pack table")
+        if not (report.get("session") or {}).get("exact"):
+            failures.append("BENCH_shuffle.json: session entry missing/non-exact")
 
     if failures:
         print("\nBENCH CHECK FAILED:", file=sys.stderr)

@@ -1,0 +1,78 @@
+"""CI recompilation guard (scripts/ci.sh) — the warm-path contract.
+
+A second `ExecutorSession.run_batch` on same-shaped input must NOT trigger a
+new jit compile: one step build per (shapes, capacities) signature, one entry
+in the traced function's own cache.  Asserted two ways:
+
+  * `ShardedJoinExecutor.compile_count` — step builds (cache misses) stay at 1
+    across repeat run_batch calls, including fresh same-shaped chunks and a
+    second session over the same executor;
+  * the compiled step's `_cache_size()` — jax's traced-call counter for the
+    cached executable stays at 1 (no retrace, hence no recompile).
+
+Exit 1 on any violation.  Usage:  python scripts/check_recompile.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+# The executor needs the 8-device virtual mesh; must precede the jax import.
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8").strip()
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+
+def main() -> int:
+    from repro.core import plan_skew_join, two_way
+    from repro.core.executor import ExecutorConfig, ShardedJoinExecutor
+    from repro.data import skewed_join_dataset
+    from repro.launch.mesh import make_mesh_compat
+
+    q = two_way()
+    data = skewed_join_dataset(q, 600, 60, skew={"B": 1.5}, seed=31)
+    plan = plan_skew_join(q, data, 8)
+    ex = ShardedJoinExecutor(plan, make_mesh_compat((8,), ("cells",)),
+                             config=ExecutorConfig(out_capacity=16384))
+
+    session = ex.session().prepare(data)
+    session.run_batch()
+    failures: list[str] = []
+    if ex.compile_count != 1 or len(ex._step_cache) != 1:
+        print(f"RECOMPILE GUARD FAILED:\n  first run_batch built "
+              f"{ex.compile_count} steps, cached {len(ex._step_cache)} "
+              f"(want 1)", file=sys.stderr)
+        return 1
+    (step,) = ex._step_cache.values()
+    # _cache_size is a private jax counter that may not survive upgrades; the
+    # public compile_count assertion above is the hard gate either way.
+    cache_size = getattr(step, "_cache_size", None)
+    cold_traces = cache_size() if cache_size else None
+
+    session.run_batch()                  # warm: prepared device arrays
+    session.run_batch(data)              # warm: fresh same-shaped chunks
+    ex.session().prepare(data).run_batch()   # second session, same signature
+    if ex.compile_count != 1:
+        failures.append(
+            f"same-shaped run_batch recompiled: {ex.compile_count} step builds")
+    if cache_size and (cache_size() != cold_traces or cache_size() != 1):
+        failures.append(
+            f"traced-fn cache grew: {cold_traces} -> {cache_size()} "
+            f"(want a single cached executable)")
+
+    if failures:
+        print("RECOMPILE GUARD FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    traces = cache_size() if cache_size else "untracked"
+    print(f"# recompile guard ok (1 step build, {traces} cached trace "
+          f"across 4 warm calls)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,3 +5,4 @@ cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_bench.py
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_recompile.py

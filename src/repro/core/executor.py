@@ -12,13 +12,16 @@ axis whose devices ARE the reducers:
           of per-route concatenate chains.
   shuffle one fixed-capacity `all_to_all` per relation.  MapReduce shuffles are
           ragged; TPU collectives are dense, so tuples are packed MoE-style by
-          COUNTING SORT: destinations are small ints in [0, k), so a row's slot
-          is its exclusive prefix count within its bucket (stable — arrival
-          order preserved) and the same prefix-sum matrix's last row is the
-          per-bucket histogram, yielding overflow counts with no extra pass.
-          No argsort.  The Shares plan is exactly what makes
-          a small static capacity sufficient — per-cell load is balanced by
-          construction; overflow counters report when it wasn't.
+          RADIX COUNTING SORT — the Pallas `bucket_pack` kernel
+          (kernels/bucket_pack.py): per-tile histograms carried across the
+          sequential grid give each row its stable within-bucket rank in ONE
+          streaming pass, O(m + k) for ANY k, and the same histogram is the
+          per-bucket load, yielding overflow counts with no extra pass.  (The
+          old O(m·k) one-hot prefix-sum pack and its k > 32 argsort fallback
+          are gone from the hot path; the argsort pack survives only as the
+          test oracle `_pack_buckets_argsort`.)  The Shares plan is exactly
+          what makes a small static capacity sufficient — per-cell load is
+          balanced by construction; overflow counters report when it wasn't.
   reduce  per-device: local multiway SORT-MERGE join of whatever arrived.
           Each cascade step dense-ranks the union of both fragments' join keys
           (lexsort + the Pallas `segment_scan` kernel), sorts the right
@@ -43,6 +46,15 @@ origin-dedup scheme was insufficient — constituents arriving via DIFFERENT
 residuals at a shared cell could still join; caught by
 tests/test_executor.py::test_four_relation_chain_join.)
 
+Execution is SESSION-based: `ExecutorSession.prepare` shards and uploads the
+relations once, derives per-relation shuffle capacities from a single jitted
+routing/histogram pass on device (no host-side numpy re-route), and compiles
+the step once per (shapes, capacities) signature; `run_batch` then streams
+same-shaped tuple chunks through the warm executable — zero recompiles, zero
+per-call host routing.  `ShardedJoinExecutor.run` is the one-shot wrapper
+(fresh session per call; compiled steps are still shared across sessions of
+the same executor via its cache).
+
 Conventions: attribute values are int32 ≥ 0; -1 marks invalid/padding rows.
 `k` (total reducers) must equal the mesh axis size here; production meshes fold
 many logical cells per device (see launch/mesh.py notes).
@@ -55,16 +67,20 @@ from typing import Mapping
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import ops as kops
-from ..kernels.ref import run_lengths_ref, segment_scan_ref
+from ..kernels.ref import bucket_pack_ref, run_lengths_ref, segment_scan_ref
 from ..launch.mesh import shard_map_compat
 from .hypercube import hash_seed
 from .plan import JoinQuery
 from .skewjoin import SkewJoinPlan
 
 INVALID = -1
+
+
+# Compiled-step cache bound per executor (see _compiled_step eviction note).
+_STEP_CACHE_MAX = 8
 
 
 @dataclass(frozen=True)
@@ -136,16 +152,16 @@ def _route_relation(rows: jnp.ndarray, routes: list[_Route], use_kernels: bool
     exactly once.  phys dest = logical % k; -1 marks non-members.
     """
     n, w = rows.shape
+    member_base = rows[:, 0] != INVALID        # shared by every route: hoisted
     logical_cols, dest_cols = [], []
     for route in routes:
-        member = rows[:, 0] != INVALID
+        member = member_base
         for col, val in route.eq_constraints:
             member &= rows[:, col] == val
         for col, vals in route.notin_constraints:
-            hit = jnp.zeros((n,), bool)
-            for v in vals:
-                hit |= rows[:, col] == v
-            member &= ~hit
+            # One comparison against the stacked HH values, not |vals| passes.
+            hh = jnp.asarray(vals, rows.dtype)
+            member &= ~(rows[:, col][:, None] == hh[None, :]).any(axis=1)
         if route.hashed and use_kernels:
             # Fused Pallas router: one VMEM pass for all hashed attributes.
             base = kops.route_cells(rows, route.hashed)
@@ -172,37 +188,21 @@ def _route_relation(rows: jnp.ndarray, routes: list[_Route], use_kernels: bool
 # Shuffle pack
 # ---------------------------------------------------------------------------
 
-# Beyond this many buckets the counting sort's O(m·k) one-hot prefix sum
-# outgrows the O(m log m) argsort pack, so _pack_buckets dispatches back.
-_COUNTING_SORT_MAX_K = 32
-
-
-def _pack_buckets(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int
+def _pack_buckets(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int,
+                  use_kernels: bool = True
                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Counting-sort scatter of (dest, rows) into a (k, cap, w) buffer.
+    """Radix counting-sort scatter of (dest, rows) into a (k, cap, w) buffer.
 
-    Destinations are small ints in [0, k), so no argsort is needed: a row's
-    slot within its bucket is its exclusive prefix count over that bucket
-    (stable — bucket contents keep arrival order, bit-identical to the
-    argsort pack), and the final row of the same prefix-sum matrix IS the
-    per-bucket histogram (`segment_histogram` semantics with no second pass),
-    which gives the overflow count directly.  The one-hot prefix sum is
-    O(m·k), so large meshes fall back to the argsort pack, which produces the
-    identical buffer.  Returns (buf, overflow)."""
-    if k > _COUNTING_SORT_MAX_K:
-        return _pack_buckets_argsort(dest, rows, k, cap)
-    m, w = rows.shape
-    d = jnp.where((dest >= 0) & (dest < k), dest.astype(jnp.int32),
-                  jnp.int32(k))                                  # invalid -> k
-    onehot = d[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]   # (m, k)
-    pos = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1   # excl. prefix count
-    pos_in = jnp.take_along_axis(pos, jnp.minimum(d, k - 1)[:, None],
-                                 axis=1)[:, 0]
-    hist = pos[-1] + 1 if m else jnp.zeros((k,), jnp.int32)  # bucket totals
-    overflow = jnp.maximum(hist - cap, 0).sum()
-    buf = jnp.full((k, cap, w), INVALID, dtype=rows.dtype)
-    buf = buf.at[d, pos_in].set(rows, mode="drop")   # d = k or pos_in ≥ cap -> dropped
-    return buf, overflow
+    One streaming pass via the `bucket_pack` kernel: per-tile histograms
+    carried across tiles give each row its stable within-bucket rank (bucket
+    contents keep arrival order, bit-identical to the argsort pack kept below
+    as the test oracle), and the accumulated histogram is the per-bucket load,
+    so the overflow count needs no extra pass.  O(m + k) for ANY k — there is
+    no argsort dispatch and no O(m·k) one-hot prefix-sum matrix.  Returns
+    (buf, overflow)."""
+    if use_kernels:
+        return kops.bucket_pack(dest, rows, k, cap)
+    return bucket_pack_ref(dest, rows, k, cap)
 
 
 def _pack_buckets_argsort(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int
@@ -356,7 +356,12 @@ def _local_join_dense(frags: dict[str, jnp.ndarray], query: JoinQuery,
 
 
 class ShardedJoinExecutor:
-    """Runs a SkewJoinPlan on a 1-D mesh whose size equals plan.k."""
+    """Runs a SkewJoinPlan on a 1-D mesh whose size equals plan.k.
+
+    Holds everything static: the routing recipes, the jitted capacity pass,
+    and a cache of compiled steps keyed on (input shapes, capacities).  All
+    data movement lives in `ExecutorSession` (see `session()`); `run` is the
+    one-shot convenience wrapper."""
 
     def __init__(self, plan: SkewJoinPlan, mesh: Mesh, axis: str = "cells",
                  config: ExecutorConfig = ExecutorConfig()):
@@ -366,7 +371,9 @@ class ShardedJoinExecutor:
                 f"{mesh.shape[axis]} (production folds logical cells per device)")
         self.plan, self.mesh, self.axis, self.config = plan, mesh, axis, config
         self.routes = _build_routes(plan)
-        self._caps: dict[str, int] = {}
+        self._step_cache: dict[tuple, object] = {}
+        self._cap_fn = None
+        self.compile_count = 0          # step builds (one per distinct key)
 
     # -- control plane ------------------------------------------------------
     def _shard(self, arr: np.ndarray) -> np.ndarray:
@@ -377,43 +384,50 @@ class ShardedJoinExecutor:
         pad = np.full((n_pad, arr.shape[1]), INVALID, arr.dtype)
         return np.concatenate([arr, pad]).astype(np.int32)
 
-    def _capacity(self, rel_name: str, data: Mapping[str, np.ndarray]) -> int:
-        """Static per-(src device, dest) bucket capacity from the plan's own
-        routing — the Shares guarantee makes this small; slack covers hashing
-        variance.  One routing pass over the whole relation; per-(device, dest)
-        maxima come from a single bincount over dev·k + dest."""
-        k = self.plan.k
-        sharded = self._shard(np.asarray(data[rel_name]))
-        per_dev = sharded.shape[0] // k
-        valid_idx = np.nonzero(sharded[:, 0] != INVALID)[0]
-        worst = 1
-        if len(valid_idx):
-            ridx, dest = self.plan.route_relation(rel_name, sharded[valid_idx])
-            if len(dest):
-                dev = valid_idx[ridx] // per_dev
-                counts = np.bincount(dev * k + dest, minlength=k * k)
-                worst = max(worst, int(counts.max()))
-        return int(np.ceil(worst * self.config.capacity_factor))
+    def _upload(self, sharded: np.ndarray) -> jnp.ndarray:
+        """Place a host-sharded array on the mesh, split along the axis."""
+        return jax.device_put(
+            sharded, NamedSharding(self.mesh, P(self.axis)))
 
-    # -- data plane ----------------------------------------------------------
-    def run(self, data: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
-        """Execute the plan; returns {'rows', 'valid', 'shuffle_overflow',
-        'join_overflow', 'recv_counts'} gathered to host."""
-        k = self.plan.k
-        query = self.plan.query
-        cfg = self.config
-        if not self.plan.residuals:
-            # Provably empty join (some relation contributes zero tuples).
-            w = len(query.attributes)
-            return {"rows": np.zeros((0, w), np.int32),
-                    "valid": np.zeros((0,), bool),
-                    "shuffle_overflow": np.zeros(k, np.int64),
-                    "join_overflow": np.zeros(k, np.int64),
-                    "recv_counts": np.zeros(k, np.int64)}
-        caps = {r.name: self._capacity(r.name, data) for r in query.relations}
-        self._caps = caps
-        sharded = {r.name: self._shard(np.asarray(data[r.name]))
-                   for r in query.relations}
+    def _capacity_pass(self):
+        """Jitted routing/histogram pass shared by every session.
+
+        One call routes ALL relations on device with the same fused
+        `_route_relation` the step uses (so capacities and the step see
+        identical destinations) and returns each relation's worst
+        per-(source device, destination) routed-copy count via a single
+        scatter-add histogram over dev·k + dest — the host-side numpy
+        re-route this replaces did that routing a second time per run."""
+        if self._cap_fn is None:
+            k, cfg, query = self.plan.k, self.config, self.plan.query
+            routes = self.routes
+
+            def worst_counts(*arrs):
+                outs = []
+                for rel, a in zip(query.relations, arrs):
+                    dest, _ = _route_relation(a, routes[rel.name],
+                                              cfg.use_kernels)
+                    n = a.shape[0]
+                    per_dev = max(n // k, 1)
+                    fan = dest.shape[0] // max(n, 1)
+                    dev = jnp.repeat(
+                        jnp.arange(n, dtype=jnp.int32) // per_dev, fan)
+                    idx = jnp.where(dest >= 0, dev * k + dest, k * k)
+                    counts = jnp.zeros((k * k + 1,), jnp.int32).at[idx].add(1)
+                    outs.append(counts[:k * k].max())
+                return tuple(outs)
+
+            self._cap_fn = jax.jit(worst_counts)
+        return self._cap_fn
+
+    def _compiled_step(self, shapes: tuple, caps: Mapping[str, int]):
+        """Compiled map→shuffle→reduce step for one (shapes, caps) signature."""
+        query, cfg, k = self.plan.query, self.config, self.plan.k
+        key = (shapes, tuple(caps[r.name] for r in query.relations))
+        f = self._step_cache.pop(key, None)
+        if f is not None:
+            self._step_cache[key] = f     # re-insert: LRU, not FIFO, eviction
+            return f
         routes = self.routes
 
         def step(*arrs):
@@ -423,7 +437,8 @@ class ShardedJoinExecutor:
             for rel in query.relations:
                 dest, rows = _route_relation(local[rel.name], routes[rel.name],
                                              cfg.use_kernels)
-                buf, over = _pack_buckets(dest, rows, k, caps[rel.name])
+                buf, over = _pack_buckets(dest, rows, k, caps[rel.name],
+                                          cfg.use_kernels)
                 sh_over = sh_over + over
                 recv = jax.lax.all_to_all(buf, self.axis, split_axis=0,
                                           concat_axis=0, tiled=True)
@@ -436,19 +451,27 @@ class ShardedJoinExecutor:
                     recv_count[None])
 
         specs_in = tuple(P(self.axis) for _ in query.relations)
-        specs_out = (P(self.axis), P(self.axis), P(self.axis), P(self.axis),
-                     P(self.axis))
-        f = shard_map_compat(step, mesh=self.mesh, in_specs=specs_in,
-                             out_specs=specs_out)
-        args = [jnp.asarray(sharded[r.name]) for r in query.relations]
-        out, valid, sh_over, j_over, recv = jax.jit(f)(*args)
-        return {
-            "rows": np.asarray(out).reshape(-1, out.shape[-1]),
-            "valid": np.asarray(valid).reshape(-1),
-            "shuffle_overflow": np.asarray(sh_over),
-            "join_overflow": np.asarray(j_over),
-            "recv_counts": np.asarray(recv),
-        }
+        specs_out = (P(self.axis),) * 5
+        f = jax.jit(shard_map_compat(step, mesh=self.mesh, in_specs=specs_in,
+                                     out_specs=specs_out))
+        # Bounded: one-shot run()s over ever-changing data derive fresh caps
+        # each time, and each retained executable pins real memory — evict
+        # oldest-inserted so a long-lived executor can't grow without limit.
+        while len(self._step_cache) >= _STEP_CACHE_MAX:
+            self._step_cache.pop(next(iter(self._step_cache)))
+        self._step_cache[key] = f
+        self.compile_count += 1
+        return f
+
+    # -- data plane ----------------------------------------------------------
+    def session(self) -> "ExecutorSession":
+        """New device-resident session (upload + capacities once, run many)."""
+        return ExecutorSession(self)
+
+    def run(self, data: Mapping[str, np.ndarray]) -> dict[str, np.ndarray]:
+        """One-shot execute; returns {'rows', 'valid', 'shuffle_overflow',
+        'join_overflow', 'recv_counts'} gathered to host."""
+        return self.session().prepare(data).run_batch()
 
     def result_rows(self, data: Mapping[str, np.ndarray]) -> np.ndarray:
         res = self.run(data)
@@ -458,3 +481,87 @@ class ShardedJoinExecutor:
                 f"join={res['join_overflow'].sum()}; raise capacity_factor/"
                 f"out_capacity")
         return res["rows"][res["valid"]]
+
+
+class ExecutorSession:
+    """Device-resident executor session: upload once, run warm many times.
+
+    `prepare(data)` shards and uploads the relations a single time, derives
+    per-relation shuffle capacities from ONE jitted routing/histogram pass
+    (no host-side numpy re-route), and freezes them for the session; the
+    compiled step is fetched from the executor's cache keyed on
+    (shapes, capacities), so every subsequent `run_batch` on same-shaped
+    input reuses the warm executable with no recompilation and no host
+    round-trips.  `run_batch(chunks)` streams new tuple chunks through that
+    executable: chunks smaller than the prepared shapes are padded up to them
+    (staying on the warm path); larger chunks recompile for the new shape.
+    Capacities stay frozen at prepare-time values — the overflow counters
+    report when a later batch exceeds them (raise `capacity_factor` or
+    re-prepare)."""
+
+    def __init__(self, executor: ShardedJoinExecutor):
+        self.executor = executor
+        self.caps: dict[str, int] = {}
+        self._device_args: list[jnp.ndarray] | None = None
+        self._shapes: tuple | None = None
+
+    def prepare(self, data: Mapping[str, np.ndarray],
+                caps: Mapping[str, int] | None = None) -> "ExecutorSession":
+        """Shard + upload `data`, derive (or accept) shuffle capacities."""
+        ex = self.executor
+        plan = ex.plan
+        if not plan.residuals:
+            # Provably empty join (some relation contributes zero tuples).
+            self._device_args, self._shapes = [], ()
+            return self
+        sharded = [ex._shard(np.asarray(data[r.name]))
+                   for r in plan.query.relations]
+        self._device_args = [ex._upload(s) for s in sharded]
+        self._shapes = tuple(s.shape for s in sharded)
+        if caps is None:
+            worst = ex._capacity_pass()(*self._device_args)
+            factor = ex.config.capacity_factor
+            caps = {r.name: int(np.ceil(max(int(w), 1) * factor))
+                    for r, w in zip(plan.query.relations, worst)}
+        self.caps = dict(caps)
+        return self
+
+    def run_batch(self, chunks: Mapping[str, np.ndarray] | None = None
+                  ) -> dict[str, np.ndarray]:
+        """Execute one batch through the warm step.
+
+        `chunks=None` re-runs the prepared relations; otherwise `chunks` maps
+        every relation to a fresh tuple array (a streamed batch), padded up to
+        the session shapes when smaller so the cached executable is reused."""
+        if self._shapes is None:
+            raise RuntimeError("ExecutorSession.run_batch before prepare()")
+        ex = self.executor
+        plan, query = ex.plan, ex.plan.query
+        k = plan.k
+        if not plan.residuals:
+            w = len(query.attributes)
+            return {"rows": np.zeros((0, w), np.int32),
+                    "valid": np.zeros((0,), bool),
+                    "shuffle_overflow": np.zeros(k, np.int64),
+                    "join_overflow": np.zeros(k, np.int64),
+                    "recv_counts": np.zeros(k, np.int64)}
+        if chunks is None:
+            args = self._device_args
+        else:
+            args = []
+            for rel, target in zip(query.relations, self._shapes):
+                sh = ex._shard(np.asarray(chunks[rel.name]))
+                if sh.shape[0] < target[0]:
+                    pad = np.full((target[0] - sh.shape[0], sh.shape[1]),
+                                  INVALID, sh.dtype)
+                    sh = np.concatenate([sh, pad])
+                args.append(ex._upload(sh))
+        f = ex._compiled_step(tuple(a.shape for a in args), self.caps)
+        out, valid, sh_over, j_over, recv = f(*args)
+        return {
+            "rows": np.asarray(out).reshape(-1, out.shape[-1]),
+            "valid": np.asarray(valid).reshape(-1),
+            "shuffle_overflow": np.asarray(sh_over),
+            "join_overflow": np.asarray(j_over),
+            "recv_counts": np.asarray(recv),
+        }

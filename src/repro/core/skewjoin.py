@@ -90,12 +90,35 @@ class SkewJoinPlan:
         return np.concatenate(rows), np.concatenate(dests)
 
     def reducer_loads(self, data: Mapping[str, np.ndarray]) -> np.ndarray:
-        """#input tuples landing on each of the k reducers (balance metric)."""
-        loads = np.zeros(self.k, dtype=np.int64)
-        for rel in self.query.relations:
-            _, dest = self.route_relation(rel.name, data[rel.name])
-            np.add.at(loads, dest, 1)
-        return loads
+        """#input tuples landing on each of the k reducers (balance metric).
+
+        One `np.bincount` over the concatenated destinations — not a
+        per-relation `np.add.at` scatter loop."""
+        dests = [self.route_relation(rel.name, data[rel.name])[1]
+                 for rel in self.query.relations]
+        dest = (np.concatenate(dests) if dests
+                else np.zeros(0, np.int64))
+        return np.bincount(dest, minlength=self.k).astype(np.int64)
+
+    def shuffle_capacity(self, rel_name: str, sharded: np.ndarray,
+                         n_devices: int) -> int:
+        """Worst per-(source device, destination) routed-copy count for one
+        device-sharded relation (rows split into `n_devices` contiguous
+        blocks; -1 rows are padding).  This is the capacity hook: the
+        host-side oracle for the executor session's jitted on-device
+        capacity pass — `ExecutorSession.prepare` derives its per-relation
+        shuffle capacities as ceil(this · capacity_factor)."""
+        per_dev = max(len(sharded) // n_devices, 1)
+        valid_idx = np.nonzero(sharded[:, 0] != -1)[0]
+        if not len(valid_idx):
+            return 1
+        ridx, dest = self.route_relation(rel_name, sharded[valid_idx])
+        if not len(dest):
+            return 1
+        dev = valid_idx[ridx] // per_dev
+        counts = np.bincount(dev * self.k + dest,
+                             minlength=n_devices * self.k)
+        return max(1, int(counts.max()))
 
 
 # The greedy doubling below re-evaluates identical (expr, k_i) pairs every

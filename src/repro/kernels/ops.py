@@ -11,7 +11,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from . import build_probe, hash_partition as _hp, route_cells as _rc, segment_histogram as _sh
+from . import (build_probe, bucket_pack as _bp, hash_partition as _hp,
+               route_cells as _rc, segment_histogram as _sh)
 
 INTERPRET = (os.environ.get("REPRO_PALLAS_INTERPRET", "") == "1"
              or jax.default_backend() != "tpu")
@@ -63,3 +64,15 @@ def route_cells(rows, recipe, block: int = _rc.DEFAULT_BLOCK):
     """Fused map-phase routing — see kernels/route_cells.py."""
     return _rc.route_cells(rows, recipe=recipe, block=block,
                            interpret=INTERPRET)
+
+
+def bucket_pack(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int):
+    """Radix shuffle pack into (k, cap, w) — see kernels/bucket_pack.py.
+
+    Off-TPU this routes to the kernel's vectorized-XLA twin (not interpret
+    mode): bit-identical, and the radix formulation is the production hot
+    path there too.  Interpret-mode kernel validation lives in the tests.
+    """
+    if INTERPRET:
+        return _bp.bucket_pack_host(dest, rows, k=k, cap=cap)
+    return _bp.bucket_pack(dest, rows, k=k, cap=cap)

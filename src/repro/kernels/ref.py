@@ -81,6 +81,43 @@ def segment_histogram_ref(values: jnp.ndarray, n_bins: int) -> jnp.ndarray:
         valid.astype(jnp.int32))
 
 
+def bucket_rank_ref(dest: jnp.ndarray, k: int
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(rank, hist): stable within-bucket rank + histogram, one-hot cumsum.
+
+    rank[i] = |{j < i : dest[j] == dest[i]}| for dest in [0, k); values
+    outside the range rank within a sentinel bucket.  Ground truth for the
+    `bucket_pack` radix kernel — O(m·k), dead simple on purpose.
+    """
+    m = dest.shape[0]
+    d = jnp.where((dest >= 0) & (dest < k), dest.astype(jnp.int32),
+                  jnp.int32(k))
+    if m == 0:
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((k,), jnp.int32)
+    onehot = d[:, None] == jnp.arange(k + 1, dtype=jnp.int32)[None, :]
+    pos = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1
+    rank = jnp.take_along_axis(pos, d[:, None], axis=1)[:, 0]
+    return rank, pos[-1, :k] + 1
+
+
+def bucket_pack_ref(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable counting-sort pack into (k, cap, w) + overflow count.
+
+    Semantic oracle for `bucket_pack`: row i lands at buf[dest[i], rank[i]];
+    invalid destinations and ranks beyond cap are dropped; overflow counts
+    the dropped valid rows.
+    """
+    m, w = rows.shape
+    rank, hist = bucket_rank_ref(dest, k)
+    d = jnp.where((dest >= 0) & (dest < k), dest.astype(jnp.int32),
+                  jnp.int32(k))
+    overflow = jnp.maximum(hist - cap, 0).sum()
+    buf = jnp.full((k, cap, w), jnp.int32(-1), dtype=rows.dtype)
+    buf = buf.at[d, rank].set(rows, mode="drop")
+    return buf, overflow
+
+
 def route_cells_ref(rows: jnp.ndarray,
                     recipe: tuple[tuple[int, int, int, int], ...]
                     ) -> jnp.ndarray:

@@ -134,19 +134,20 @@ def test_empty_relation():
 
 
 def _assert_pack_equal(dest, rows, k, cap):
-    """New counting-sort pack vs the old argsort oracle."""
+    """Radix bucket_pack (kernel-backed and jnp-ref paths) vs argsort oracle."""
     from repro.core.executor import _pack_buckets, _pack_buckets_argsort
     import jax.numpy as jnp
     d, r = jnp.asarray(dest, jnp.int32), jnp.asarray(rows, jnp.int32)
     buf_ref, over_ref = _pack_buckets_argsort(d, r, k, cap)
-    buf, over = _pack_buckets(d, r, k, cap)
-    np.testing.assert_array_equal(np.asarray(buf), np.asarray(buf_ref))
-    assert int(over) == int(over_ref)
+    for use_kernels in (True, False):
+        buf, over = _pack_buckets(d, r, k, cap, use_kernels)
+        np.testing.assert_array_equal(np.asarray(buf), np.asarray(buf_ref))
+        assert int(over) == int(over_ref)
     return np.asarray(buf_ref), int(over_ref)
 
 
-@pytest.mark.parametrize("k", [8, 64])          # 64 > _COUNTING_SORT_MAX_K:
-@pytest.mark.parametrize("seed", [0, 1, 2])     # exercises the argsort dispatch
+@pytest.mark.parametrize("k", [8, 64])          # spans the old pack's k=32
+@pytest.mark.parametrize("seed", [0, 1, 2])     # one-hot/argsort dispatch cliff
 def test_pack_buckets_matches_argsort_randomized(seed, k):
     rng = np.random.default_rng(seed)
     m, cap, w = 257, 16, 3
