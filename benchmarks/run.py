@@ -13,6 +13,9 @@ Tables:
   shuffle_scaling     radix bucket_pack vs the superseded one-hot/argsort packs
                       over k, plus cold-vs-warm ExecutorSession latency; also
                       emits machine-readable BENCH_shuffle.json at the repo root
+  fold_scaling        logical-cell folding: k >> devices plans on the 8-device
+                      mesh, LPT vs modulo placement max/mean device load on a
+                      zipf-skewed workload; emits BENCH_fold.json
   kernel_throughput   hash_partition / match_counts / segment_histogram
   planner_latency     plan_skew_join wall time vs #HH (control-plane budget)
 """
@@ -286,6 +289,81 @@ def bench_shuffle_scaling():
     row("shuffle_scaling/json", 0.0, f"path={out_path}")
 
 
+def bench_fold_scaling():
+    """Logical-cell folding: k >> n_devices plans on the small mesh.
+
+    One zipf-skewed two-way workload; for each k in the fold ladder the SAME
+    plan executes under LPT and modulo placement on 8 devices.  Exactness is
+    asserted against `reference_join` for every (k, strategy) pair, and the
+    headline quantity is the max/mean per-device delivered load
+    (`recv_counts`): LPT must never exceed modulo's max on this workload —
+    scripts/check_bench.py fails the build if it does, or if anything is
+    non-exact or overflows.  Emits BENCH_fold.json (schema in
+    scripts/check_bench.py)."""
+    import jax
+    if len(jax.devices()) < 8:
+        row("fold_scaling/skipped", 0.0, "needs 8 devices")
+        return
+    from repro.core import (canonical, lpt_placement, modulo_placement,
+                            plan_skew_join, reference_join, two_way)
+    from repro.core.executor import ExecutorConfig, ShardedJoinExecutor
+    from repro.data import skewed_join_dataset
+    from repro.launch.mesh import make_mesh_compat
+
+    n_dev = 8
+    mesh = make_mesh_compat((n_dev,), ("cells",))
+    q = two_way()
+    data = skewed_join_dataset(q, 4_000, 2_000, skew={"B": 1.3}, seed=11)
+    expect = reference_join(q, data)
+    report = {"n_devices": n_dev, "workload": {
+        "query": str(q), "n_per_relation": 4_000, "domain": 2_000,
+        "zipf_B": 1.3, "ref_rows": len(expect)}, "fold": []}
+
+    for k in (8, 64, 256):
+        plan = plan_skew_join(q, data, k)
+        loads = plan.cell_loads(data)
+        ex = ShardedJoinExecutor(plan, mesh,
+                                 config=ExecutorConfig(out_capacity=1 << 20))
+        entry = {"k": k, "hh": plan.hhs.total(),
+                 "residuals": len(plan.residuals)}
+        for strategy, placement in (
+                ("lpt", lpt_placement(loads, n_dev)),
+                ("modulo", modulo_placement(k, n_dev))):
+            session = ex.session().prepare(data, placement=placement)
+            # _timeit's warmup call is the compile; the timed rep is warm.
+            us, res = _timeit(lambda: session.run_batch(), reps=1)
+            got = res["rows"][res["valid"]]
+            exact = (len(got) == len(expect)
+                     and bool((canonical(got) == expect).all()))
+            recv = res["recv_counts"].astype(float)
+            entry[strategy] = {
+                "warm_us": us, "exact": exact,
+                "max_load": float(recv.max()),
+                "mean_load": float(recv.mean()),
+                "imbalance": float(recv.max() / max(recv.mean(), 1)),
+                "shuffle_overflow": int(res["shuffle_overflow"].sum()),
+                "join_overflow": int(res["join_overflow"].sum()),
+            }
+        entry["lpt_vs_modulo_max"] = (entry["lpt"]["max_load"]
+                                      / max(entry["modulo"]["max_load"], 1))
+        report["fold"].append(entry)
+        row(f"fold_scaling/k={k}", entry["lpt"]["warm_us"],
+            f"strategy=lpt;max_load={entry['lpt']['max_load']:.0f};"
+            f"mean_load={entry['lpt']['mean_load']:.0f};"
+            f"imbalance={entry['lpt']['imbalance']:.2f};"
+            f"modulo_max={entry['modulo']['max_load']:.0f};"
+            f"modulo_imbalance={entry['modulo']['imbalance']:.2f};"
+            f"exact={entry['lpt']['exact'] and entry['modulo']['exact']};"
+            f"shuffle_overflow={entry['lpt']['shuffle_overflow'] + entry['modulo']['shuffle_overflow']};"
+            f"join_overflow={entry['lpt']['join_overflow'] + entry['modulo']['join_overflow']}")
+
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_fold.json")
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    row("fold_scaling/json", 0.0, f"path={out_path}")
+
+
 def bench_kernel_throughput():
     """Kernel wrappers (jit'd ref path on CPU; Pallas compiles on TPU)."""
     import jax
@@ -333,6 +411,7 @@ def main() -> None:
     bench_executor_e2e()
     bench_reduce_scaling()
     bench_shuffle_scaling()
+    bench_fold_scaling()
     bench_kernel_throughput()
     bench_planner_latency()
     print(f"# {len(ROWS)} rows")

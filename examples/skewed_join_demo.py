@@ -1,8 +1,12 @@
 """End-to-end driver: a distributed multiway join under heavy skew.
 
 This is the paper-native "production job": plan (HH detection + residual
-decomposition + Shares) then execute (hash -> capacity-bounded all_to_all ->
-local joins) on a device mesh, validated against the single-machine oracle.
+decomposition + Shares) then execute (hash -> placement fold ->
+capacity-bounded all_to_all -> local joins) on a device mesh, validated
+against the single-machine oracle.  The plan allocates k=64 LOGICAL reducer
+cells — 8x more than the 8 physical devices — and the executor folds them
+onto the mesh with skew-aware LPT placement (core/placement.py), exactly how
+a data-sized plan runs on fixed hardware.
 
 Run:  PYTHONPATH=src python examples/skewed_join_demo.py
 (8 virtual CPU devices are requested below; on TPU the mesh is real.)
@@ -35,16 +39,23 @@ def main():
     print(f"query: {query}")
     print(f"mesh: {dict(mesh.shape)} ({len(jax.devices())} devices)\n")
 
-    plan = plan_skew_join(query, data, k=8, max_hh_per_attr=3)
+    # k = 64 logical cells on 8 devices: an 8x fold.
+    plan = plan_skew_join(query, data, k=64, max_hh_per_attr=3)
     print(f"HHs: B={plan.hhs.values('B')} C={plan.hhs.values('C')}")
-    print(f"{len(plan.residuals)} residual joins, "
+    print(f"{len(plan.residuals)} residual joins, k={plan.k} logical cells, "
           f"total planned communication {plan.total_cost:.0f} tuples\n")
 
     ex = ShardedJoinExecutor(plan, mesh,
                              config=ExecutorConfig(out_capacity=32768))
     t0 = time.time()
-    result = ex.run(data)
+    session = ex.session().prepare(data)
+    result = session.run_batch()
     dt = time.time() - t0
+
+    p = session.placement
+    fold = np.bincount(p.table, minlength=p.n_devices)
+    print(f"placement: {p.strategy}, {p.k} logical cells -> {p.n_devices} "
+          f"devices ({fold.min()}-{fold.max()} cells each)")
 
     rows = result["rows"][result["valid"]]
     expect = reference_join(query, data)
@@ -54,7 +65,7 @@ def main():
           f"vs oracle: {len(rows)} joined rows)")
     print(f"shuffle overflow: {int(result['shuffle_overflow'].sum())}, "
           f"join overflow: {int(result['join_overflow'].sum())}")
-    print(f"per-reducer received tuples: min={recv.min():.0f} "
+    print(f"per-device received tuples: min={recv.min():.0f} "
           f"mean={recv.mean():.0f} max={recv.max():.0f} "
           f"(imbalance {recv.max()/max(recv.mean(),1):.2f})")
     assert ok, "distributed result != oracle"

@@ -1,11 +1,36 @@
 """Benchmark smoke check — the CI step that runs after pytest (scripts/ci.sh).
 
 Runs the executor-facing tables of benchmarks/run.py (executor_e2e,
-reduce_scaling, shuffle_scaling, kernel_throughput) and FAILS (exit 1) if any
-row reports a capacity overflow or a non-exact output — the silent-wrongness
-modes of the fixed-capacity data plane — or if the shuffle_scaling table (or
-its BENCH_shuffle.json artifact) is missing entirely.  Timing is reported but
-never judged: this is a correctness tripwire, not a perf gate.
+reduce_scaling, shuffle_scaling, fold_scaling, kernel_throughput) and FAILS
+(exit 1) if any row reports a capacity overflow or a non-exact output — the
+silent-wrongness modes of the fixed-capacity data plane — or if a required
+table (or its BENCH_*.json artifact) is missing entirely.  Timing is reported
+but never judged, with ONE exception: fold_scaling's LPT max device load must
+not exceed modulo's (the placement's only reason to exist).  This is a
+correctness tripwire, not a perf gate.
+
+BENCH_*.json schema (producers: benchmarks/run.py; consumers: this script and
+docs/architecture.md readers).  Every artifact is a single JSON object:
+
+  BENCH_shuffle.json
+    m                int     rows per pack call
+    pack             list    one entry per swept k:
+        k, radix_us, onehot_us, argsort_us, speedup_vs_onehot,
+        speedup_vs_argsort, exact (bool), overflow (int)
+    session          object  cold_us, warm_us, warm_speedup, exact (bool),
+                             step_builds, shuffle_overflow (int)
+
+  BENCH_fold.json
+    n_devices        int     physical mesh size
+    workload         object  query, n_per_relation, domain, zipf_B, ref_rows
+    fold             list    one entry per swept k:
+        k, hh, residuals, lpt_vs_modulo_max, and per strategy
+        ("lpt"/"modulo") an object: warm_us, exact (bool), max_load,
+        mean_load, imbalance, shuffle_overflow, join_overflow
+
+New benchmarks follow the same shape: top-level scalars for the workload, one
+list of per-sweep-point entries each carrying its own `exact`/overflow fields
+(so this script can gate them), and a `row(...)` CSV line per entry.
 
 Usage:  PYTHONPATH=src python scripts/check_bench.py
 """
@@ -27,15 +52,17 @@ def _derived(derived: str) -> dict[str, str]:
 
 
 def main() -> int:
-    # Delete the committed artifact first so the missing-artifact check below
-    # proves this run REGENERATED it (not that a stale copy existed).
-    stale = os.path.join(_REPO, "BENCH_shuffle.json")
-    if os.path.exists(stale):
-        os.remove(stale)
+    # Delete the committed artifacts first so the missing-artifact checks
+    # below prove this run REGENERATED them (not that stale copies existed).
+    for name in ("BENCH_shuffle.json", "BENCH_fold.json"):
+        stale = os.path.join(_REPO, name)
+        if os.path.exists(stale):
+            os.remove(stale)
     print("name,us_per_call,derived")
     bench.bench_executor_e2e()
     bench.bench_reduce_scaling()
     bench.bench_shuffle_scaling()
+    bench.bench_fold_scaling()
     bench.bench_kernel_throughput()
 
     failures: list[str] = []
@@ -68,6 +95,12 @@ def main() -> int:
                 failures.append(f"{name}: non-exact session output ({_d})")
             if d.get("shuffle_overflow", "0") != "0":
                 failures.append(f"{name}: shuffle_overflow={d['shuffle_overflow']}")
+        if name.startswith("fold_scaling/k="):
+            if d.get("exact") != "True":
+                failures.append(f"{name}: non-exact folded output ({_d})")
+            for key in ("shuffle_overflow", "join_overflow"):
+                if d.get(key, "0") != "0":
+                    failures.append(f"{name}: {key}={d[key]}")
 
     # The shuffle table must exist — a silently skipped table must not pass.
     if not any(n.startswith("shuffle_scaling/k=") for n, _, _ in bench.ROWS):
@@ -86,6 +119,32 @@ def main() -> int:
             failures.append("BENCH_shuffle.json: empty or non-exact pack table")
         if not (report.get("session") or {}).get("exact"):
             failures.append("BENCH_shuffle.json: session entry missing/non-exact")
+
+    # The fold table must exist, be exact, and LPT must not lose to modulo.
+    if not any(n.startswith("fold_scaling/k=") for n, _, _ in bench.ROWS):
+        failures.append(
+            "fold_scaling table missing (needs 8 devices — check XLA_FLAGS "
+            "xla_force_host_platform_device_count)")
+    fold_path = os.path.join(_REPO, "BENCH_fold.json")
+    if not os.path.exists(fold_path):
+        failures.append(f"missing artifact {fold_path}")
+    else:
+        report = json.load(open(fold_path))
+        entries = report.get("fold") or []
+        if not entries:
+            failures.append("BENCH_fold.json: empty fold table")
+        for e in entries:
+            for strat in ("lpt", "modulo"):
+                s = e.get(strat) or {}
+                if not s.get("exact"):
+                    failures.append(
+                        f"BENCH_fold.json k={e.get('k')}: {strat} non-exact")
+            lpt, mod = (e.get("lpt") or {}), (e.get("modulo") or {})
+            if lpt.get("max_load", 0) > mod.get("max_load", 0):
+                failures.append(
+                    f"BENCH_fold.json k={e.get('k')}: LPT max device load "
+                    f"{lpt.get('max_load')} exceeds modulo's "
+                    f"{mod.get('max_load')} — skew-aware placement regressed")
 
     if failures:
         print("\nBENCH CHECK FAILED:", file=sys.stderr)

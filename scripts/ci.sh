@@ -1,8 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 verify + benchmark smoke check (see ROADMAP.md).
+# Tier-1 verify + benchmark smoke check + example smoke runs (see ROADMAP.md).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_bench.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_recompile.py
+
+# The documented entry points must not rot: each example asserts its own
+# exactness (quickstart runs a k=256 plan folded onto 8 devices; the demo a
+# k=64 three-way join) and exits non-zero on mismatch.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/quickstart.py
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python examples/skewed_join_demo.py

@@ -8,6 +8,7 @@ Public surface:
   heavy_hitters— exact + Misra-Gries HH detection
   cost         — communication-cost expressions and analytic baselines
   hypercube    — tuple -> reducer-cell routing
+  placement    — logical cell -> physical device fold (LPT / modulo)
   skewjoin     — end-to-end planner (SkewJoinPlan)
   reference    — numpy multiway-join oracle
   executor     — shard_map distributed execution engine
@@ -18,6 +19,8 @@ from .cost import (CostExpression, CostTerm, cost_expression, naive_hh_cost,
 from .dominance import dominated_attributes, dominates, free_share_attributes
 from .heavy_hitters import HHSet, MisraGries, exact_heavy_hitters
 from .hypercube import Hypercube, hash_seed, multiply_shift
+from .placement import (CellPlacement, lpt_placement, modulo_placement,
+                        place_cells)
 from .plan import JoinQuery, Relation, running_example, triangle, two_way
 from .reference import canonical, reference_join
 from .residual import (ORDINARY, ResidualJoin, TypeCombination, decompose,
@@ -31,7 +34,9 @@ __all__ = [
     "CostExpression", "CostTerm", "cost_expression", "naive_hh_cost",
     "shares_hh_cost", "shares_hh_splits", "dominated_attributes", "dominates",
     "free_share_attributes", "HHSet", "MisraGries", "exact_heavy_hitters",
-    "Hypercube", "hash_seed", "multiply_shift", "JoinQuery", "Relation",
+    "Hypercube", "hash_seed", "multiply_shift", "CellPlacement",
+    "lpt_placement", "modulo_placement", "place_cells", "JoinQuery",
+    "Relation",
     "running_example", "triangle", "two_way", "canonical", "reference_join",
     "ORDINARY", "ResidualJoin", "TypeCombination", "decompose",
     "enumerate_combinations", "residual_sizes", "tuple_mask", "SharesSolution",

@@ -1,63 +1,39 @@
 """Distributed SkewShares execution engine: map -> shuffle -> reduce in JAX.
 
-The MapReduce round of the paper, realized with `shard_map` over a 1-D device
-axis whose devices ARE the reducers:
+The MapReduce round of the paper as a `shard_map` over a 1-D device axis.
+The full design narrative — per-phase kernel inventory, the logical-cell /
+physical-device fold, capacity derivation, session caching — lives in
+docs/architecture.md; this docstring keeps only the invariants the code
+relies on.
 
-  map     per-device: route each local tuple to its residual-join cells
-          (multiply-shift hashes on non-HH attributes — the Pallas
-          `hash_partition` kernel — plus static replication over the axes the
-          relation lacks, per Hypercube.route).  All residual routes of a
-          relation are fused into ONE pass: a single (n, total_fanout)
-          destination buffer and a single broadcast/tag of the rows, instead
-          of per-route concatenate chains.
-  shuffle one fixed-capacity `all_to_all` per relation.  MapReduce shuffles are
-          ragged; TPU collectives are dense, so tuples are packed MoE-style by
-          RADIX COUNTING SORT — the Pallas `bucket_pack` kernel
-          (kernels/bucket_pack.py): per-tile histograms carried across the
-          sequential grid give each row its stable within-bucket rank in ONE
-          streaming pass, O(m + k) for ANY k, and the same histogram is the
-          per-bucket load, yielding overflow counts with no extra pass.  (The
-          old O(m·k) one-hot prefix-sum pack and its k > 32 argsort fallback
-          are gone from the hot path; the argsort pack survives only as the
-          test oracle `_pack_buckets_argsort`.)  The Shares plan is exactly
-          what makes a small static capacity sufficient — per-cell load is
-          balanced by construction; overflow counters report when it wasn't.
-  reduce  per-device: local multiway SORT-MERGE join of whatever arrived.
-          Each cascade step dense-ranks the union of both fragments' join keys
-          (lexsort + the Pallas `segment_scan` kernel), sorts the right
-          fragment by group id, reads per-group run lengths with the Pallas
-          `run_lengths` kernel, and expands matches with a static-shape gather
-          driven by an exclusive prefix sum of per-left-row counts — reducer
-          work is O(n log n), never the O(n²) match matrix (kept as
-          `_local_join_dense` for benchmarks/tests), so the Shares load
-          guarantee translates into wall-clock (Beame–Koutris–Suciu's
-          near-linear reducer-local work requirement).
+  map     `_route_relation`: every residual route of a relation in one fused
+          pass (Pallas `route_cells`), emitting wrapped LOGICAL cell ids;
+          `fold_cells` then looks each id up in the device-resident
+          `CellPlacement` table to get the PHYSICAL destination device.
+  shuffle `bucket_pack` radix counting sort into one fixed-capacity
+          (n_devices, cap, w) buffer per relation, then one `all_to_all`.
+  reduce  `_local_join`: sort-merge cascade (`segment_scan`/`run_lengths`),
+          matching only within equal logical cell ids.
 
-Cells of every residual join live in one flat LOGICAL reducer space
-(Hypercube.offset, cumulative across residual blocks); physical placement wraps
-modulo the device count, so one shuffle serves all residual joins at once — the
-paper's "one MapReduce job" property — even when there are more logical cells
-than devices.  Every routed tuple copy carries its logical cell id as a hidden
-column and the local join matches ONLY within equal logical cells: logical
-cells partition the join output by construction (each output tuple's values
-determine exactly one cell of exactly one residual), so shared physical cells
-can never produce cross-residual or cross-cell duplicates.  (An earlier
-origin-dedup scheme was insufficient — constituents arriving via DIFFERENT
-residuals at a shared cell could still join; caught by
-tests/test_executor.py::test_four_relation_chain_join.)
-
-Execution is SESSION-based: `ExecutorSession.prepare` shards and uploads the
-relations once, derives per-relation shuffle capacities from a single jitted
-routing/histogram pass on device (no host-side numpy re-route), and compiles
-the step once per (shapes, capacities) signature; `run_batch` then streams
-same-shaped tuple chunks through the warm executable — zero recompiles, zero
-per-call host routing.  `ShardedJoinExecutor.run` is the one-shot wrapper
-(fresh session per call; compiled steps are still shared across sessions of
-the same executor via its cache).
+Invariants:
+  * Logical cells of every residual join live in one flat id space
+    (Hypercube.offset, cumulative), wrapped modulo plan.k; a `CellPlacement`
+    (core/placement.py) maps the k wrapped ids onto n_devices physical
+    devices — LPT bin-packing on observed per-cell loads by default,
+    modulo as the oblivious fallback, identity when k == n_devices.
+  * Every routed tuple copy carries its UNWRAPPED logical cell id as a hidden
+    last column and the local join matches only within equal ids, so cells
+    sharing a device — wrapped blocks or folded placements, even every cell
+    on one device — can never produce cross-residual or cross-cell
+    duplicates.  Placement moves load, never correctness.
+  * The placement table is a runtime argument of the compiled step, not a
+    constant: re-placing cells never recompiles.
 
 Conventions: attribute values are int32 ≥ 0; -1 marks invalid/padding rows.
-`k` (total reducers) must equal the mesh axis size here; production meshes fold
-many logical cells per device (see launch/mesh.py notes).
+`plan.k` is the LOGICAL cell count — any power of two ≥ the mesh axis size
+executes (k < n_devices or non-power-of-two k raise at construction).
+Sessions (`ExecutorSession.prepare`/`run_batch`) upload once and stream warm;
+`ShardedJoinExecutor.run` is the one-shot wrapper.
 """
 from __future__ import annotations
 
@@ -70,9 +46,12 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import ops as kops
-from ..kernels.ref import bucket_pack_ref, run_lengths_ref, segment_scan_ref
+from ..kernels.ref import (bucket_pack_ref, fold_cells_ref, run_lengths_ref,
+                           segment_scan_ref)
 from ..launch.mesh import shard_map_compat
 from .hypercube import hash_seed
+from .placement import (CellPlacement, check_fold, modulo_placement,
+                        place_cells)
 from .plan import JoinQuery
 from .skewjoin import SkewJoinPlan
 
@@ -145,11 +124,13 @@ def _route_relation(rows: jnp.ndarray, routes: list[_Route], use_kernels: bool
                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Route one relation through ALL of its residual routes in a single pass.
 
-    Returns (phys_dest (n·F,), rows_tagged (n·F, w+1)) where F is the total
-    fanout over every route.  Per-route logical cells are assembled into one
-    (n, F) buffer; the rows are broadcast and tagged with their LOGICAL cell id
-    (last column — the local-join key that makes shared physical cells exact)
-    exactly once.  phys dest = logical % k; -1 marks non-members.
+    Returns (dest (n·F,), rows_tagged (n·F, w+1)) where F is the total fanout
+    over every route.  Per-route logical cells are assembled into one (n, F)
+    buffer; the rows are broadcast and tagged with their UNWRAPPED logical
+    cell id (last column — the local-join key that makes shared cells exact)
+    exactly once.  `dest` is the WRAPPED logical cell (logical % k, in
+    [0, k)); -1 marks non-members.  Physical destinations are the caller's
+    concern: compose with `_fold_dests` and a placement table.
     """
     n, w = rows.shape
     member_base = rows[:, 0] != INVALID        # shared by every route: hoisted
@@ -182,6 +163,28 @@ def _route_relation(rows: jnp.ndarray, routes: list[_Route], use_kernels: bool
         [jnp.broadcast_to(rows[:, None, :], (n, fanout, w)),
          logical[:, :, None].astype(rows.dtype)], axis=-1)
     return dest.reshape(-1), tagged.reshape(n * fanout, w + 1)
+
+
+def _check_placement_compat(placement: CellPlacement, k: int, n_dev: int
+                            ) -> None:
+    """A placement must map exactly the plan's k cells onto exactly the
+    mesh's devices (shared by executor construction and session prepare)."""
+    if placement.k != k or placement.n_devices != n_dev:
+        raise ValueError(
+            f"placement maps {placement.k} cells -> {placement.n_devices} "
+            f"devices; plan/mesh need {k} -> {n_dev}")
+
+
+def _fold_dests(dest: jnp.ndarray, ptable: jnp.ndarray, use_kernels: bool
+                ) -> jnp.ndarray:
+    """Wrapped logical dests -> physical devices via the placement table.
+
+    `ptable` is the device-resident `CellPlacement.table` ((k,) int32,
+    replicated); -1 non-members pass through.  Pallas `fold_cells` on the
+    kernel path, `fold_cells_ref` otherwise."""
+    if use_kernels:
+        return kops.fold_cells(dest, ptable)
+    return fold_cells_ref(dest, ptable)
 
 
 # ---------------------------------------------------------------------------
@@ -356,31 +359,40 @@ def _local_join_dense(frags: dict[str, jnp.ndarray], query: JoinQuery,
 
 
 class ShardedJoinExecutor:
-    """Runs a SkewJoinPlan on a 1-D mesh whose size equals plan.k.
+    """Runs a SkewJoinPlan on a 1-D mesh of any size ≤ plan.k.
 
-    Holds everything static: the routing recipes, the jitted capacity pass,
-    and a cache of compiled steps keyed on (input shapes, capacities).  All
-    data movement lives in `ExecutorSession` (see `session()`); `run` is the
-    one-shot convenience wrapper."""
+    plan.k LOGICAL cells fold onto the mesh's n_devices physical devices
+    through a `CellPlacement` table (identity modulo when k == n_devices,
+    skew-aware LPT from observed cell loads otherwise; pass `placement` or
+    `placement_strategy` to override).  Holds everything static: the routing
+    recipes, the jitted counting pass, and a cache of compiled steps keyed on
+    (input shapes, capacities) — the placement table is a runtime argument,
+    so re-placing never recompiles.  All data movement lives in
+    `ExecutorSession` (see `session()`); `run` is the one-shot wrapper."""
 
     def __init__(self, plan: SkewJoinPlan, mesh: Mesh, axis: str = "cells",
-                 config: ExecutorConfig = ExecutorConfig()):
-        if mesh.shape[axis] != plan.k:
-            raise ValueError(
-                f"plan.k={plan.k} must equal mesh axis '{axis}' size "
-                f"{mesh.shape[axis]} (production folds logical cells per device)")
+                 config: ExecutorConfig = ExecutorConfig(),
+                 placement: CellPlacement | None = None,
+                 placement_strategy: str = "lpt"):
+        n_dev = mesh.shape[axis]
+        check_fold(plan.k, n_dev)
+        if placement is not None:
+            _check_placement_compat(placement, plan.k, n_dev)
         self.plan, self.mesh, self.axis, self.config = plan, mesh, axis, config
+        self.n_devices = n_dev
+        self.placement = placement            # None -> per-session default
+        self.placement_strategy = placement_strategy
         self.routes = _build_routes(plan)
         self._step_cache: dict[tuple, object] = {}
-        self._cap_fn = None
+        self._count_fn = None
         self.compile_count = 0          # step builds (one per distinct key)
 
     # -- control plane ------------------------------------------------------
     def _shard(self, arr: np.ndarray) -> np.ndarray:
         """Pad rows to a device-divisible count with INVALID rows."""
-        k = self.plan.k
+        n_dev = self.n_devices
         n = len(arr)
-        n_pad = -n % k
+        n_pad = -n % n_dev
         pad = np.full((n_pad, arr.shape[1]), INVALID, arr.dtype)
         return np.concatenate([arr, pad]).astype(np.int32)
 
@@ -389,40 +401,54 @@ class ShardedJoinExecutor:
         return jax.device_put(
             sharded, NamedSharding(self.mesh, P(self.axis)))
 
-    def _capacity_pass(self):
+    def _upload_table(self, placement: CellPlacement) -> jnp.ndarray:
+        """Replicate a placement table to every device on the mesh."""
+        return jax.device_put(placement.table.astype(np.int32),
+                              NamedSharding(self.mesh, P()))
+
+    def _count_pass(self):
         """Jitted routing/histogram pass shared by every session.
 
         One call routes ALL relations on device with the same fused
-        `_route_relation` the step uses (so capacities and the step see
-        identical destinations) and returns each relation's worst
-        per-(source device, destination) routed-copy count via a single
-        scatter-add histogram over dev·k + dest — the host-side numpy
-        re-route this replaces did that routing a second time per run."""
-        if self._cap_fn is None:
+        `_route_relation` the step uses (so placement, capacities, and the
+        step all see identical destinations) and returns each relation's
+        (n_devices, k) count matrix of routed copies per (source device,
+        wrapped LOGICAL cell) — one scatter-add histogram over dev·k + dest.
+        The session folds these tiny matrices on host: column-sums are the
+        per-cell loads LPT placement bin-packs, and folding columns through a
+        placement table yields the per-(source, destination device) counts
+        that set shuffle capacities.  The host-side numpy re-route this
+        replaces did the routing a second time per run."""
+        if self._count_fn is None:
             k, cfg, query = self.plan.k, self.config, self.plan.query
-            routes = self.routes
+            n_dev, routes = self.n_devices, self.routes
 
-            def worst_counts(*arrs):
+            def count_matrices(*arrs):
                 outs = []
                 for rel, a in zip(query.relations, arrs):
                     dest, _ = _route_relation(a, routes[rel.name],
                                               cfg.use_kernels)
                     n = a.shape[0]
-                    per_dev = max(n // k, 1)
+                    per_dev = max(n // n_dev, 1)
                     fan = dest.shape[0] // max(n, 1)
                     dev = jnp.repeat(
                         jnp.arange(n, dtype=jnp.int32) // per_dev, fan)
-                    idx = jnp.where(dest >= 0, dev * k + dest, k * k)
-                    counts = jnp.zeros((k * k + 1,), jnp.int32).at[idx].add(1)
-                    outs.append(counts[:k * k].max())
+                    idx = jnp.where(dest >= 0, dev * k + dest, n_dev * k)
+                    counts = jnp.zeros((n_dev * k + 1,),
+                                       jnp.int32).at[idx].add(1)
+                    outs.append(counts[:n_dev * k].reshape(n_dev, k))
                 return tuple(outs)
 
-            self._cap_fn = jax.jit(worst_counts)
-        return self._cap_fn
+            self._count_fn = jax.jit(count_matrices)
+        return self._count_fn
 
     def _compiled_step(self, shapes: tuple, caps: Mapping[str, int]):
-        """Compiled map→shuffle→reduce step for one (shapes, caps) signature."""
-        query, cfg, k = self.plan.query, self.config, self.plan.k
+        """Compiled map→shuffle→reduce step for one (shapes, caps) signature.
+
+        The placement table is the step's FIRST argument (replicated, traced)
+        — sessions with different placements share the same executable."""
+        query, cfg = self.plan.query, self.config
+        n_dev = self.n_devices
         key = (shapes, tuple(caps[r.name] for r in query.relations))
         f = self._step_cache.pop(key, None)
         if f is not None:
@@ -430,14 +456,15 @@ class ShardedJoinExecutor:
             return f
         routes = self.routes
 
-        def step(*arrs):
+        def step(ptable, *arrs):
             local = {r.name: a for r, a in zip(query.relations, arrs)}
             frags, sh_over = {}, jnp.int32(0)
             recv_count = jnp.int32(0)
             for rel in query.relations:
                 dest, rows = _route_relation(local[rel.name], routes[rel.name],
                                              cfg.use_kernels)
-                buf, over = _pack_buckets(dest, rows, k, caps[rel.name],
+                phys = _fold_dests(dest, ptable, cfg.use_kernels)
+                buf, over = _pack_buckets(phys, rows, n_dev, caps[rel.name],
                                           cfg.use_kernels)
                 sh_over = sh_over + over
                 recv = jax.lax.all_to_all(buf, self.axis, split_axis=0,
@@ -450,7 +477,7 @@ class ShardedJoinExecutor:
             return (out[None], valid[None], sh_over[None], j_over[None],
                     recv_count[None])
 
-        specs_in = tuple(P(self.axis) for _ in query.relations)
+        specs_in = (P(),) + tuple(P(self.axis) for _ in query.relations)
         specs_out = (P(self.axis),) * 5
         f = jax.jit(shard_map_compat(step, mesh=self.mesh, in_specs=specs_in,
                                      out_specs=specs_out))
@@ -486,45 +513,80 @@ class ShardedJoinExecutor:
 class ExecutorSession:
     """Device-resident executor session: upload once, run warm many times.
 
-    `prepare(data)` shards and uploads the relations a single time, derives
-    per-relation shuffle capacities from ONE jitted routing/histogram pass
-    (no host-side numpy re-route), and freezes them for the session; the
-    compiled step is fetched from the executor's cache keyed on
-    (shapes, capacities), so every subsequent `run_batch` on same-shaped
-    input reuses the warm executable with no recompilation and no host
-    round-trips.  `run_batch(chunks)` streams new tuple chunks through that
-    executable: chunks smaller than the prepared shapes are padded up to them
-    (staying on the warm path); larger chunks recompile for the new shape.
-    Capacities stay frozen at prepare-time values — the overflow counters
-    report when a later batch exceeds them (raise `capacity_factor` or
-    re-prepare)."""
+    `prepare(data)` shards and uploads the relations a single time, runs ONE
+    jitted routing/histogram pass (no host-side numpy re-route) whose
+    (n_devices, k) per-relation count matrices drive BOTH control decisions:
+    the cell placement (LPT bin-packing of per-logical-cell loads when
+    k > n_devices, identity modulo otherwise — or whatever `placement=` says)
+    and the per-relation shuffle capacities (worst per-(source, destination
+    device) routed-copy count after folding through that placement, times
+    `capacity_factor`).  The compiled step is fetched from the executor's
+    cache keyed on (shapes, capacities) — the placement table is a traced
+    argument, so it never forces a rebuild — and every subsequent `run_batch`
+    on same-shaped input reuses the warm executable with no recompilation and
+    no host round-trips.  `run_batch(chunks)` streams new tuple chunks
+    through that executable: chunks smaller than the prepared shapes are
+    padded up to them (staying on the warm path); larger chunks recompile for
+    the new shape.  Capacities and placement stay frozen at prepare-time
+    values — the overflow counters report when a later batch exceeds them
+    (raise `capacity_factor` or re-prepare)."""
 
     def __init__(self, executor: ShardedJoinExecutor):
         self.executor = executor
         self.caps: dict[str, int] = {}
+        self.placement: CellPlacement | None = None
         self._device_args: list[jnp.ndarray] | None = None
+        self._ptable_dev: jnp.ndarray | None = None
         self._shapes: tuple | None = None
 
     def prepare(self, data: Mapping[str, np.ndarray],
-                caps: Mapping[str, int] | None = None) -> "ExecutorSession":
-        """Shard + upload `data`, derive (or accept) shuffle capacities."""
+                caps: Mapping[str, int] | None = None,
+                placement: CellPlacement | None = None) -> "ExecutorSession":
+        """Shard + upload `data`; derive (or accept) placement + capacities."""
         ex = self.executor
-        plan = ex.plan
+        plan, n_dev = ex.plan, ex.n_devices
+        if placement is None:
+            placement = ex.placement
+        if placement is not None:
+            _check_placement_compat(placement, plan.k, n_dev)
         if not plan.residuals:
             # Provably empty join (some relation contributes zero tuples).
+            # Still expose a (trivial) placement so callers reading
+            # `session.placement` after prepare never see None.
+            self.placement = placement or modulo_placement(plan.k, n_dev)
             self._device_args, self._shapes = [], ()
             return self
         sharded = [ex._shard(np.asarray(data[r.name]))
                    for r in plan.query.relations]
         self._device_args = [ex._upload(s) for s in sharded]
         self._shapes = tuple(s.shape for s in sharded)
+        counts = None
+        if placement is None:
+            if plan.k == n_dev:
+                placement = modulo_placement(plan.k, n_dev)   # identity
+            else:
+                counts = self._counts()
+                cell_loads = np.sum([c.sum(axis=0) for c in counts], axis=0)
+                placement = place_cells(cell_loads, plan.k, n_dev,
+                                        ex.placement_strategy)
+        self.placement = placement
+        self._ptable_dev = ex._upload_table(placement)
         if caps is None:
-            worst = ex._capacity_pass()(*self._device_args)
+            counts = counts if counts is not None else self._counts()
             factor = ex.config.capacity_factor
-            caps = {r.name: int(np.ceil(max(int(w), 1) * factor))
-                    for r, w in zip(plan.query.relations, worst)}
+            # Fold logical columns onto devices: worst (source, dest) count.
+            fold = np.zeros((plan.k, n_dev), np.int64)
+            fold[np.arange(plan.k), placement.table] = 1
+            caps = {r.name: int(np.ceil(max(int((c @ fold).max()), 1)
+                                        * factor))
+                    for r, c in zip(plan.query.relations, counts)}
         self.caps = dict(caps)
         return self
+
+    def _counts(self) -> list[np.ndarray]:
+        """Per-relation (n_devices, k) routed-copy count matrices (host)."""
+        return [np.asarray(c, np.int64)
+                for c in self.executor._count_pass()(*self._device_args)]
 
     def run_batch(self, chunks: Mapping[str, np.ndarray] | None = None
                   ) -> dict[str, np.ndarray]:
@@ -537,14 +599,14 @@ class ExecutorSession:
             raise RuntimeError("ExecutorSession.run_batch before prepare()")
         ex = self.executor
         plan, query = ex.plan, ex.plan.query
-        k = plan.k
+        n_dev = ex.n_devices
         if not plan.residuals:
             w = len(query.attributes)
             return {"rows": np.zeros((0, w), np.int32),
                     "valid": np.zeros((0,), bool),
-                    "shuffle_overflow": np.zeros(k, np.int64),
-                    "join_overflow": np.zeros(k, np.int64),
-                    "recv_counts": np.zeros(k, np.int64)}
+                    "shuffle_overflow": np.zeros(n_dev, np.int64),
+                    "join_overflow": np.zeros(n_dev, np.int64),
+                    "recv_counts": np.zeros(n_dev, np.int64)}
         if chunks is None:
             args = self._device_args
         else:
@@ -557,7 +619,7 @@ class ExecutorSession:
                     sh = np.concatenate([sh, pad])
                 args.append(ex._upload(sh))
         f = ex._compiled_step(tuple(a.shape for a in args), self.caps)
-        out, valid, sh_over, j_over, recv = f(*args)
+        out, valid, sh_over, j_over, recv = f(self._ptable_dev, *args)
         return {
             "rows": np.asarray(out).reshape(-1, out.shape[-1]),
             "valid": np.asarray(valid).reshape(-1),

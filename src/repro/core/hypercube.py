@@ -59,6 +59,18 @@ class Hypercube:
             out *= s
         return out
 
+    def cell_ids(self) -> np.ndarray:
+        """The block's LOGICAL cell ids: [offset, offset + n_cells), unwrapped.
+
+        Offsets are cumulative across a plan's residual blocks, so these ids
+        are globally unique; routing wraps them modulo the plan's k and
+        `core.placement.CellPlacement` then folds the wrapped ids onto
+        physical devices.  (Cells of this block may therefore share a device
+        with cells of OTHER residuals — exactness comes from the executor
+        joining only within equal logical cell ids.)"""
+        return np.arange(self.offset, self.offset + self.n_cells,
+                         dtype=np.int64)
+
     def strides(self) -> tuple[int, ...]:
         """Mixed-radix strides: cell_id = Σ coord_i · stride_i (row-major)."""
         strides = [1] * len(self.shares)

@@ -20,9 +20,12 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Mapping
+from typing import TYPE_CHECKING, Mapping
 
 import numpy as np
+
+if TYPE_CHECKING:  # placement imports skewjoin's plan types in docs only
+    from .placement import CellPlacement
 
 from .cost import naive_hh_cost
 from .heavy_hitters import HHSet, exact_heavy_hitters
@@ -72,8 +75,9 @@ class SkewJoinPlan:
         Returns (row_idx, reducer_id) concatenated over residual joins.  A row
         participates in residual J_i iff it satisfies J_i's type constraints
         (paper Example 3.2's dispatch rules).  Cell ids wrap modulo k: when
-        there are more residual cells than reducers, blocks share physical
-        cells (exact, given the executor's logical-cell join keying).
+        there are more residual cells than k, blocks share LOGICAL cells
+        (exact, given the executor's logical-cell join keying); folding the k
+        logical cells onto fewer devices is `core.placement`'s job.
         """
         rel = self.query.relation(rel_name)
         rows, dests = [], []
@@ -89,25 +93,45 @@ class SkewJoinPlan:
             return np.zeros(0, np.int64), np.zeros(0, np.int64)
         return np.concatenate(rows), np.concatenate(dests)
 
-    def reducer_loads(self, data: Mapping[str, np.ndarray]) -> np.ndarray:
-        """#input tuples landing on each of the k reducers (balance metric).
+    def cell_loads(self, data: Mapping[str, np.ndarray]) -> np.ndarray:
+        """#routed tuple copies landing on each of the k LOGICAL cells.
 
         One `np.bincount` over the concatenated destinations — not a
-        per-relation `np.add.at` scatter loop."""
+        per-relation `np.add.at` scatter loop.  This is the load estimate
+        `core.placement.lpt_placement` bin-packs onto physical devices."""
         dests = [self.route_relation(rel.name, data[rel.name])[1]
                  for rel in self.query.relations]
         dest = (np.concatenate(dests) if dests
                 else np.zeros(0, np.int64))
         return np.bincount(dest, minlength=self.k).astype(np.int64)
 
+    def reducer_loads(self, data: Mapping[str, np.ndarray],
+                      placement: "CellPlacement | None" = None) -> np.ndarray:
+        """Per-reducer input loads (balance metric).
+
+        Without a placement: the k logical cells ARE the reducers (one cell
+        per device, the pre-folding view).  With a `CellPlacement`: loads are
+        folded through its table and the result is per PHYSICAL device —
+        the quantity the reduce-phase makespan actually depends on."""
+        loads = self.cell_loads(data)
+        if placement is None:
+            return loads
+        return placement.device_loads(loads).astype(np.int64)
+
     def shuffle_capacity(self, rel_name: str, sharded: np.ndarray,
-                         n_devices: int) -> int:
-        """Worst per-(source device, destination) routed-copy count for one
-        device-sharded relation (rows split into `n_devices` contiguous
+                         n_devices: int,
+                         placement: "CellPlacement | None" = None) -> int:
+        """Worst per-(source device, destination device) routed-copy count for
+        one device-sharded relation (rows split into `n_devices` contiguous
         blocks; -1 rows are padding).  This is the capacity hook: the
         host-side oracle for the executor session's jitted on-device
         capacity pass — `ExecutorSession.prepare` derives its per-relation
-        shuffle capacities as ceil(this · capacity_factor)."""
+        shuffle capacities as ceil(this · capacity_factor).
+
+        `placement` folds logical cells onto devices first (destinations are
+        then physical, stride n_devices); without one, destinations stay
+        LOGICAL cells in [0, k) (stride k) — correct for any k, and identical
+        to the physical view when k == n_devices."""
         per_dev = max(len(sharded) // n_devices, 1)
         valid_idx = np.nonzero(sharded[:, 0] != -1)[0]
         if not len(valid_idx):
@@ -115,9 +139,13 @@ class SkewJoinPlan:
         ridx, dest = self.route_relation(rel_name, sharded[valid_idx])
         if not len(dest):
             return 1
+        n_dest = self.k
+        if placement is not None:
+            dest = placement.table[dest]
+            n_dest = n_devices
         dev = valid_idx[ridx] // per_dev
-        counts = np.bincount(dev * self.k + dest,
-                             minlength=n_devices * self.k)
+        counts = np.bincount(dev * n_dest + dest,
+                             minlength=n_devices * n_dest)
         return max(1, int(counts.max()))
 
 
@@ -191,9 +219,10 @@ def plan_skew_join(
         order = tuple(res.expr.free_attrs)
         shares = tuple(sol.shares.get(a, 1) for a in order)
         # Offsets are cumulative in LOGICAL cell space (globally unique per
-        # residual block); physical placement wraps modulo k at routing time.
-        # Correctness with shared physical cells comes from the executor's
-        # logical-cell tagging: tuples only join within one logical cell.
+        # residual block); routing wraps them modulo k, and core.placement
+        # folds the k wrapped cells onto the physical devices.  Correctness
+        # with shared cells comes from the executor's logical-cell tagging:
+        # tuples only join within one logical cell.
         cube = Hypercube(order, shares, offset=offset, salt=salt)
         plans.append(ResidualPlan(res, ki, sol, cube))
         offset += cube.n_cells

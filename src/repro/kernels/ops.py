@@ -66,6 +66,11 @@ def route_cells(rows, recipe, block: int = _rc.DEFAULT_BLOCK):
                            interpret=INTERPRET)
 
 
+def fold_cells(dest, table, block: int = _rc.DEFAULT_BLOCK):
+    """Logical->physical placement lookup — see kernels/route_cells.py."""
+    return _rc.fold_cells(dest, table, block=block, interpret=INTERPRET)
+
+
 def bucket_pack(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int):
     """Radix shuffle pack into (k, cap, w) — see kernels/bucket_pack.py.
 

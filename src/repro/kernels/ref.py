@@ -129,3 +129,16 @@ def route_cells_ref(rows: jnp.ndarray,
         ids, _ = hash_partition_ref(rows[:, col], seed, share)
         cell = cell + ids * stride
     return cell
+
+
+def fold_cells_ref(dest: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Placement lookup oracle: physical device per wrapped logical cell.
+
+    dest int32 (m,) in [0, k) with -1 marking non-members (passed through);
+    table int32 (k,) maps logical cell -> physical device.  This is the
+    logical->physical fold of `core.placement.CellPlacement`, composed after
+    `route_cells` in the executor's map phase.
+    """
+    valid = dest >= 0
+    safe = jnp.where(valid, dest, 0)
+    return jnp.where(valid, table[safe], jnp.int32(-1))

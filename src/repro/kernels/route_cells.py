@@ -9,6 +9,12 @@ single VMEM pass over the rows.
 
 The (col, seed, share, stride) recipe is static (from the SkewJoinPlan), so it
 compiles into the kernel body — shares are powers of two, so `mod` is a shift.
+
+`fold_cells` is the companion logical->physical stage: it looks each wrapped
+logical cell id up in a device-resident `CellPlacement` table (core/placement)
+so k logical cells execute on any smaller mesh.  The table is a runtime
+ARGUMENT, not a compile-time constant — re-placing cells never recompiles the
+executor step.
 """
 from __future__ import annotations
 
@@ -35,6 +41,49 @@ def _route_cells_kernel(rows_ref, out_ref, *, recipe, width):
         ids = (h >> jnp.uint32(32 - b)).astype(jnp.int32)
         cell = cell + ids * stride
     out_ref[...] = cell
+
+
+def _fold_cells_kernel(dest_ref, table_ref, out_ref, *, k):
+    dest = dest_ref[...]                                  # (block,)
+    table = table_ref[...]                                # (k,) whole table
+    valid = dest >= 0
+    safe = jnp.where(valid, dest, 0)
+    # One-hot contraction instead of a vector gather: TPU-friendly (VPU
+    # compare+select over the small k axis), identical semantics.
+    onehot = safe[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (dest.shape[0], k), 1)
+    phys = jnp.sum(jnp.where(onehot, table[None, :], 0), axis=1,
+                   dtype=jnp.int32)
+    out_ref[...] = jnp.where(valid, phys, jnp.int32(-1))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fold_cells(dest: jnp.ndarray, table: jnp.ndarray, *,
+               block: int = DEFAULT_BLOCK,
+               interpret: bool = False) -> jnp.ndarray:
+    """Logical->physical placement fold: out[i] = table[dest[i]], -1 kept.
+
+    dest: (m,) int32 wrapped logical cell ids in [0, k) (-1 = non-member);
+    table: (k,) int32 placement table (`CellPlacement.table`), replicated to
+    every device.  The table rides in VMEM whole per tile — k is the logical
+    cell count (hundreds), tiny next to the routed-copy stream this kernel
+    folds in one pass right after `route_cells`.
+    """
+    m = dest.shape[0]
+    k = table.shape[0]
+    n_pad = -m % block
+    dest_p = jnp.pad(dest, (0, n_pad), constant_values=-1)
+    grid = (dest_p.shape[0] // block,)
+    out = pl.pallas_call(
+        functools.partial(_fold_cells_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((k,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dest_p.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(dest_p, table)
+    return out[:m]
 
 
 @functools.partial(jax.jit,

@@ -1,0 +1,146 @@
+"""CellPlacement: LPT / modulo folding of logical cells onto devices."""
+import numpy as np
+import pytest
+
+from repro.core import (CellPlacement, lpt_placement, modulo_placement,
+                        place_cells, plan_skew_join, two_way)
+from repro.data import skewed_join_dataset
+
+
+def zipf_loads(k, alpha=1.5, seed=0):
+    rng = np.random.default_rng(seed)
+    loads = (np.arange(1, k + 1, dtype=np.float64) ** -alpha) * 10_000
+    return rng.permutation(loads)
+
+
+def test_modulo_is_identity_when_k_equals_devices():
+    p = modulo_placement(8, 8)
+    np.testing.assert_array_equal(p.table, np.arange(8))
+    assert p.strategy == "modulo"
+
+
+def test_modulo_wraps():
+    p = modulo_placement(32, 8)
+    np.testing.assert_array_equal(p.table, np.arange(32) % 8)
+    assert p.k == 32 and p.n_devices == 8
+
+
+def test_table_validation():
+    with pytest.raises(ValueError, match="non-empty 1-D"):
+        CellPlacement(np.zeros((2, 2), np.int32), 4)
+    with pytest.raises(ValueError, match=r"lie in \[0, 4\)"):
+        CellPlacement(np.array([0, 1, 4]), 4)
+    with pytest.raises(ValueError, match=r"lie in \[0, 4\)"):
+        CellPlacement(np.array([0, -1, 2]), 4)
+
+
+def test_fold_contract_errors():
+    with pytest.raises(ValueError, match="folding maps many"):
+        modulo_placement(4, 8)            # k < n_devices
+    with pytest.raises(ValueError, match="not a power of two"):
+        lpt_placement(np.ones(12), 4)     # non-power-of-two k
+
+
+def test_lpt_is_deterministic():
+    loads = zipf_loads(64)
+    a = lpt_placement(loads, 8)
+    b = lpt_placement(loads.copy(), 8)
+    np.testing.assert_array_equal(a.table, b.table)
+    assert a.strategy == "lpt"
+
+
+def test_lpt_beats_modulo_on_skewed_loads():
+    """The tentpole's balance claim, at the placement-oracle level."""
+    for seed in range(5):
+        loads = zipf_loads(256, alpha=1.5, seed=seed)
+        lpt = lpt_placement(loads, 8)
+        mod = modulo_placement(256, 8)
+        assert lpt.device_loads(loads).max() <= mod.device_loads(loads).max()
+
+
+def test_lpt_single_heavy_cell():
+    """One cell dominating everything: it gets a device mostly to itself."""
+    loads = np.ones(32)
+    loads[17] = 1000.0
+    p = lpt_placement(loads, 8)
+    heavy_dev = p.table[17]
+    # LPT places the heavy cell first, alone; the 31 unit cells then fill the
+    # other 7 devices before any rejoins it.
+    assert (p.table == heavy_dev).sum() == 1
+    assert p.device_loads(loads).max() == 1000.0
+
+
+def test_lpt_zero_loads_spread_round_robin():
+    """An all-zero estimate must not collapse onto device 0."""
+    p = lpt_placement(np.zeros(64), 8)
+    occupancy = np.bincount(p.table, minlength=8)
+    np.testing.assert_array_equal(occupancy, np.full(8, 8))
+
+
+def test_lpt_makespan_bound():
+    """Graham's list-scheduling bound, valid for ANY least-loaded greedy
+    order: makespan <= sum/m + (1 - 1/m) * max_load.  (The sharper 4/3-OPT
+    LPT bound is relative to OPT, which we can't compute here.)"""
+    m = 8
+    for seed in range(3):
+        loads = zipf_loads(128, seed=seed)
+        p = lpt_placement(loads, m)
+        bound = loads.sum() / m + (1 - 1 / m) * loads.max()
+        assert p.device_loads(loads).max() <= bound + 1e-9
+
+
+def test_device_of_and_cells_of_roundtrip():
+    loads = zipf_loads(32)
+    p = lpt_placement(loads, 4)
+    cells = np.arange(32)
+    devs = p.device_of(cells)
+    for d in range(4):
+        np.testing.assert_array_equal(p.cells_of(d), cells[devs == d])
+    # -1 passes through; ids wrap modulo k.
+    np.testing.assert_array_equal(p.device_of(np.array([-1, 0, 32])),
+                                  [-1, p.table[0], p.table[0]])
+
+
+def test_device_loads_shape_check():
+    p = modulo_placement(16, 4)
+    with pytest.raises(ValueError, match="cell_loads shape"):
+        p.device_loads(np.ones(8))
+
+
+def test_place_cells_dispatch():
+    loads = zipf_loads(64)
+    assert place_cells(loads, 64, 8, "lpt").strategy == "lpt"
+    assert place_cells(loads, 64, 8, "modulo").strategy == "modulo"
+    assert place_cells(None, 64, 8).strategy == "modulo"
+    with pytest.raises(ValueError, match="unknown placement strategy"):
+        place_cells(loads, 64, 8, "roundrobin")
+    with pytest.raises(ValueError, match="entries, expected"):
+        place_cells(loads, 128, 8, "lpt")
+
+
+def test_plan_cell_loads_feed_lpt():
+    """End-to-end oracle chain: plan -> cell_loads -> LPT -> device loads.
+
+    `reducer_loads(placement=...)` must equal folding `cell_loads` by hand,
+    and LPT must not lose to modulo on the plan's own skewed estimates."""
+    q = two_way()
+    data = skewed_join_dataset(q, 2000, 60, skew={"B": 1.8}, seed=3)
+    plan = plan_skew_join(q, data, 64)
+    loads = plan.cell_loads(data)
+    assert loads.shape == (64,) and loads.sum() > 0
+    np.testing.assert_array_equal(loads, plan.reducer_loads(data))
+    lpt = lpt_placement(loads, 8)
+    mod = modulo_placement(64, 8)
+    by_hand = np.bincount(lpt.table, weights=loads.astype(float), minlength=8)
+    np.testing.assert_array_equal(plan.reducer_loads(data, lpt), by_hand)
+    assert plan.reducer_loads(data, lpt).sum() == loads.sum()
+    assert (plan.reducer_loads(data, lpt).max()
+            <= plan.reducer_loads(data, mod).max())
+
+
+def test_imbalance_metric():
+    p = modulo_placement(8, 8)
+    assert p.imbalance(np.ones(8)) == pytest.approx(1.0)
+    spiky = np.zeros(8)
+    spiky[3] = 8.0
+    assert p.imbalance(spiky) == pytest.approx(8.0)
