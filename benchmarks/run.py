@@ -16,6 +16,10 @@ Tables:
   fold_scaling        logical-cell folding: k >> devices plans on the 8-device
                       mesh, LPT vs modulo placement max/mean device load on a
                       zipf-skewed workload; emits BENCH_fold.json
+  map_scaling         fused map_pack megakernel vs the staged
+                      route->fold->pack path, plus counting mode vs the
+                      staged count matrices and the prepare()
+                      routes-data-once guarantee; emits BENCH_map.json
   kernel_throughput   hash_partition / match_counts / segment_histogram
   planner_latency     plan_skew_join wall time vs #HH (control-plane budget)
 """
@@ -364,6 +368,133 @@ def bench_fold_scaling():
     row("fold_scaling/json", 0.0, f"path={out_path}")
 
 
+def bench_map_scaling():
+    """Fused map_pack megakernel vs the staged route->fold->pack path.
+
+    One zipf-skewed two-way workload at m = 65536 rows; for each k the SAME
+    plan's routes run through (a) the staged composition exactly as the
+    executor ran it before the megakernel — `_route_relation` (Pallas
+    route_cells) -> `_fold_dests` (fold_cells) -> `_pack_buckets` (radix
+    pack), materializing the (m·F, w+1) tagged expansion — and (b) the fused
+    `kops.map_pack` streaming pass.  Buffers and overflow counts must be
+    bit-identical (best-of-5; scripts/check_bench.py fails on any mismatch).
+    The counting-mode leg times the scatter-free (n_devices, k) histogram
+    against the staged count-matrix formula, and the prepare leg asserts an
+    `ExecutorSession.prepare` routes each relation exactly once
+    (`count_passes == 1`).  Emits BENCH_map.json."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import plan_skew_join, two_way
+    from repro.core.executor import (_build_routes, _count_matrix,
+                                     _fold_dests, _pack_buckets,
+                                     _route_relation, _route_specs)
+    from repro.core.placement import lpt_placement
+    from repro.data import skewed_join_dataset
+    from repro.kernels import ops as kops
+    from repro.kernels.map_pack import route_fanout
+
+    m, n_dev = 1 << 16, 8
+    q = two_way()
+    data = skewed_join_dataset(q, m, 4000, skew={"B": 1.2}, seed=9)
+    report = {"m": m, "n_devices": n_dev, "map": [], "count": [],
+              "prepare": None}
+
+    def best_of(fn, reps=5):
+        out = fn()     # warmup / compile
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6, out
+
+    for k in (64, 256):
+        plan = plan_skew_join(q, data, k, max_hh_per_attr=2)
+        routes = _build_routes(plan)
+        placement = lpt_placement(np.asarray(plan.cell_loads(data), float),
+                                  n_dev)
+        ptable = jnp.asarray(placement.table)
+        fold = np.zeros((k, n_dev), np.int64)
+        fold[np.arange(k), placement.table] = 1
+        rel = "R"
+        rows = jnp.asarray(data[rel], jnp.int32)
+        spec = _route_specs(routes[rel])
+        # Kernel-level pack of the WHOLE array (no shard_map): capacity must
+        # cover each destination device's TOTAL folded cell load.
+        counts = np.asarray(kops.map_count(rows, spec, k, n_dev), np.int64)
+        cap = int(np.ceil(max((counts.sum(axis=0) @ fold).max(), 1) * 1.25))
+
+        def staged(r, rt=routes[rel], c=cap):
+            dest, tagged = _route_relation(r, rt, True)
+            phys = _fold_dests(dest, ptable, True)
+            return _pack_buckets(phys, tagged, n_dev, c, True)
+
+        f_staged = jax.jit(staged)
+        f_fused = jax.jit(lambda r, s=spec, c=cap:
+                          kops.map_pack(r, s, ptable, k, n_dev, c))
+        us_s, out_s = best_of(lambda: jax.block_until_ready(f_staged(rows)))
+        us_f, out_f = best_of(lambda: jax.block_until_ready(f_fused(rows)))
+        # exact = buffer bit-identity; overflow parity is its own field.
+        exact = bool((np.asarray(out_s[0]) == np.asarray(out_f[0])).all())
+        entry = {"k": k, "fanout": route_fanout(spec), "cap": cap,
+                 "staged_us": us_s, "fused_us": us_f,
+                 "speedup": us_s / max(us_f, 1e-9), "exact": exact,
+                 "overflow": int(out_f[1]),
+                 "overflow_match": int(out_s[1]) == int(out_f[1])}
+        report["map"].append(entry)
+        row(f"map_scaling/k={k}", us_f,
+            f"staged_us={us_s:.1f};fanout={entry['fanout']};"
+            f"speedup={entry['speedup']:.2f}x;exact={exact};"
+            f"overflow={entry['overflow']};"
+            f"overflow_match={entry['overflow_match']}")
+
+        def staged_count(r, rt=routes[rel]):
+            dest, _ = _route_relation(r, rt, True)
+            return _count_matrix(dest, r.shape[0], k, n_dev)
+
+        f_sc = jax.jit(staged_count)
+        f_fc = jax.jit(lambda r, s=spec: kops.map_count(r, s, k, n_dev))
+        us_sc, out_sc = best_of(lambda: jax.block_until_ready(f_sc(rows)))
+        us_fc, out_fc = best_of(lambda: jax.block_until_ready(f_fc(rows)))
+        c_exact = bool((np.asarray(out_sc) == np.asarray(out_fc)).all())
+        report["count"].append({
+            "k": k, "staged_us": us_sc, "fused_us": us_fc,
+            "speedup": us_sc / max(us_fc, 1e-9), "exact": c_exact})
+        row(f"map_scaling/count/k={k}", us_fc,
+            f"staged_us={us_sc:.1f};speedup={us_sc/max(us_fc,1e-9):.2f}x;"
+            f"exact={c_exact}")
+
+    if len(jax.devices()) >= 8:
+        from repro.core import canonical, reference_join
+        from repro.core.executor import ExecutorConfig, ShardedJoinExecutor
+        from repro.launch.mesh import make_mesh_compat
+        small = skewed_join_dataset(q, 3_000, 3_000, skew={"B": 1.0}, seed=3)
+        plan = plan_skew_join(q, small, 64)
+        ex = ShardedJoinExecutor(plan, make_mesh_compat((8,), ("cells",)),
+                                 config=ExecutorConfig(out_capacity=131072))
+        t0 = time.perf_counter()
+        session = ex.session().prepare(small)
+        prep_us = (time.perf_counter() - t0) * 1e6
+        res = session.run_batch()
+        got = res["rows"][res["valid"]]
+        expect = reference_join(q, small)
+        exact = (len(got) == len(expect)
+                 and bool((canonical(got) == expect).all()))
+        report["prepare"] = {"prepare_us": prep_us,
+                             "count_passes": session.count_passes,
+                             "exact": exact}
+        row("map_scaling/prepare", prep_us,
+            f"count_passes={session.count_passes};exact={exact}")
+    else:
+        row("map_scaling/prepare_skipped", 0.0, "needs 8 devices")
+
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_map.json")
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    row("map_scaling/json", 0.0, f"path={out_path}")
+
+
 def bench_kernel_throughput():
     """Kernel wrappers (jit'd ref path on CPU; Pallas compiles on TPU)."""
     import jax
@@ -412,6 +543,7 @@ def main() -> None:
     bench_reduce_scaling()
     bench_shuffle_scaling()
     bench_fold_scaling()
+    bench_map_scaling()
     bench_kernel_throughput()
     bench_planner_latency()
     print(f"# {len(ROWS)} rows")

@@ -28,6 +28,19 @@ docs/architecture.md readers).  Every artifact is a single JSON object:
         ("lpt"/"modulo") an object: warm_us, exact (bool), max_load,
         mean_load, imbalance, shuffle_overflow, join_overflow
 
+  BENCH_map.json
+    m                int     input rows per map_pack call
+    n_devices        int     physical mesh size
+    map              list    one entry per swept k:
+        k, fanout, cap, staged_us, fused_us, speedup, exact (bool, buffer
+        bit-identity), overflow (int), overflow_match (bool, fused overflow
+        count == staged)
+    count            list    one entry per swept k:
+        k, staged_us, fused_us, speedup, exact (bool)
+    prepare          object  prepare_us, count_passes (must be 1 — prepare
+                             routes each relation's data exactly once),
+                             exact (bool)
+
 New benchmarks follow the same shape: top-level scalars for the workload, one
 list of per-sweep-point entries each carrying its own `exact`/overflow fields
 (so this script can gate them), and a `row(...)` CSV line per entry.
@@ -54,7 +67,7 @@ def _derived(derived: str) -> dict[str, str]:
 def main() -> int:
     # Delete the committed artifacts first so the missing-artifact checks
     # below prove this run REGENERATED them (not that stale copies existed).
-    for name in ("BENCH_shuffle.json", "BENCH_fold.json"):
+    for name in ("BENCH_shuffle.json", "BENCH_fold.json", "BENCH_map.json"):
         stale = os.path.join(_REPO, name)
         if os.path.exists(stale):
             os.remove(stale)
@@ -63,6 +76,7 @@ def main() -> int:
     bench.bench_reduce_scaling()
     bench.bench_shuffle_scaling()
     bench.bench_fold_scaling()
+    bench.bench_map_scaling()
     bench.bench_kernel_throughput()
 
     failures: list[str] = []
@@ -101,6 +115,22 @@ def main() -> int:
             for key in ("shuffle_overflow", "join_overflow"):
                 if d.get(key, "0") != "0":
                     failures.append(f"{name}: {key}={d[key]}")
+        if name.startswith("map_scaling/k=") or \
+                name.startswith("map_scaling/count/"):
+            if d.get("exact") != "True":
+                failures.append(
+                    f"{name}: fused map != staged path ({_d})")
+            if d.get("overflow", "0") != "0":
+                failures.append(f"{name}: overflow={d['overflow']}")
+            if d.get("overflow_match", "True") != "True":
+                failures.append(f"{name}: fused/staged overflow mismatch")
+        if name == "map_scaling/prepare":
+            if d.get("exact") != "True":
+                failures.append(f"{name}: non-exact session output ({_d})")
+            if d.get("count_passes") != "1":
+                failures.append(
+                    f"{name}: count_passes={d.get('count_passes')} — "
+                    f"prepare must route each relation's data exactly once")
 
     # The shuffle table must exist — a silently skipped table must not pass.
     if not any(n.startswith("shuffle_scaling/k=") for n, _, _ in bench.ROWS):
@@ -145,6 +175,30 @@ def main() -> int:
                     f"BENCH_fold.json k={e.get('k')}: LPT max device load "
                     f"{lpt.get('max_load')} exceeds modulo's "
                     f"{mod.get('max_load')} — skew-aware placement regressed")
+
+    # The map table must exist, be exact everywhere, and prepare must have
+    # routed once — the megakernel's bit-exactness/one-pass contract.
+    if not any(n.startswith("map_scaling/k=") for n, _, _ in bench.ROWS):
+        failures.append("map_scaling table missing (map sweep never ran)")
+    map_path = os.path.join(_REPO, "BENCH_map.json")
+    if not os.path.exists(map_path):
+        failures.append(f"missing artifact {map_path}")
+    else:
+        report = json.load(open(map_path))
+        if not report.get("map") or not all(
+                e.get("exact") and e.get("overflow_match")
+                for e in report["map"]):
+            failures.append("BENCH_map.json: empty or non-exact map table")
+        if not report.get("count") or not all(
+                e.get("exact") for e in report["count"]):
+            failures.append("BENCH_map.json: empty or non-exact count table")
+        prep = report.get("prepare") or {}
+        if not prep.get("exact"):
+            failures.append("BENCH_map.json: prepare entry missing/non-exact")
+        elif prep.get("count_passes") != 1:
+            failures.append(
+                f"BENCH_map.json: prepare ran {prep.get('count_passes')} "
+                f"routing passes (must be exactly 1)")
 
     if failures:
         print("\nBENCH CHECK FAILED:", file=sys.stderr)

@@ -6,12 +6,15 @@ physical-device fold, capacity derivation, session caching — lives in
 docs/architecture.md; this docstring keeps only the invariants the code
 relies on.
 
-  map     `_route_relation`: every residual route of a relation in one fused
-          pass (Pallas `route_cells`), emitting wrapped LOGICAL cell ids;
-          `fold_cells` then looks each id up in the device-resident
-          `CellPlacement` table to get the PHYSICAL destination device.
-  shuffle `bucket_pack` radix counting sort into one fixed-capacity
-          (n_devices, cap, w) buffer per relation, then one `all_to_all`.
+  map     the Pallas `map_pack` megakernel: route (all residual routes,
+          fused multiply-shift hashes), placement fold, and the radix
+          shuffle pack in ONE streaming pass per relation — the routed
+          (n·F, w+1) expansion is never materialized.  The staged
+          `_route_relation` -> `_fold_dests` -> `_pack_buckets` composition
+          survives (fuse_map=False / use_kernels=False) as the bit-exactness
+          oracle.
+  shuffle the megakernel's (n_devices, cap, w+1) fixed-capacity buffer per
+          relation goes through one `all_to_all`.
   reduce  `_local_join`: sort-merge cascade (`segment_scan`/`run_lengths`),
           matching only within equal logical cell ids.
 
@@ -37,6 +40,7 @@ Sessions (`ExecutorSession.prepare`/`run_batch`) upload once and stream warm;
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Mapping
 
@@ -46,6 +50,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import ops as kops
+from ..kernels.map_pack import count_scatter
 from ..kernels.ref import (bucket_pack_ref, fold_cells_ref, run_lengths_ref,
                            segment_scan_ref)
 from ..launch.mesh import shard_map_compat
@@ -67,6 +72,8 @@ class ExecutorConfig:
     capacity_factor: float = 2.0       # shuffle slack over the max observed load
     out_capacity: int = 4096           # per-cell join output rows (static)
     use_kernels: bool = True           # hash/scan via Pallas (else jnp ref path)
+    fuse_map: bool = True              # map phase via the map_pack megakernel
+                                       # (else staged route->fold->pack oracle)
 
 
 @dataclass(frozen=True)
@@ -80,6 +87,13 @@ class _Route:
     # Type constraints (paper Example 3.2): which rows participate.
     eq_constraints: tuple[tuple[int, int], ...]    # (col, value) must equal
     notin_constraints: tuple[tuple[int, tuple[int, ...]], ...]  # (col, hh_values)
+
+
+def _route_specs(routes: list[_Route]) -> tuple:
+    """Flatten `_Route`s to the static nested-tuple `RouteSpec` the
+    `map_pack` megakernel compiles into its body (k rides separately)."""
+    return tuple((r.hashed, r.rep_strides, r.offset, r.eq_constraints,
+                  r.notin_constraints) for r in routes)
 
 
 def _build_routes(plan: SkewJoinPlan) -> dict[str, list[_Route]]:
@@ -163,6 +177,16 @@ def _route_relation(rows: jnp.ndarray, routes: list[_Route], use_kernels: bool
         [jnp.broadcast_to(rows[:, None, :], (n, fanout, w)),
          logical[:, :, None].astype(rows.dtype)], axis=-1)
     return dest.reshape(-1), tagged.reshape(n * fanout, w + 1)
+
+
+def _count_matrix(dest: jnp.ndarray, n: int, k: int, n_src: int
+                  ) -> jnp.ndarray:
+    """(n_src, k) histogram of routed copies per (source block, wrapped cell).
+
+    The staged count formula — `map_count`'s semantic contract, shared by
+    `_count_pass`'s oracle branch, the map_scaling benchmark, and the tests
+    (the one scatter `kernels.map_pack.count_scatter` defines)."""
+    return count_scatter(dest, n, k, n_src)
 
 
 def _check_placement_compat(placement: CellPlacement, k: int, n_dev: int
@@ -287,7 +311,10 @@ def _local_join(frags: dict[str, jnp.ndarray], query: JoinQuery, cap_out: int,
         rk = jnp.where(r_valid[:, None],
                        right[:, jnp.asarray([r for _, r in shared])], jnp.int32(-3))
         g_l, g_r = _group_ids(lk, rk, use_kernels)
-        order_r = jnp.argsort(g_r)                 # stable: arrival order kept
+        # Stability is load-bearing: output order is (left row, right ARRIVAL
+        # order), bit-identical to the dense oracle — never rely on the
+        # default.
+        order_r = jnp.argsort(g_r, stable=True)
         sg_r = g_r[order_r]
         if use_kernels:
             _, _, rlen = kops.run_lengths(sg_r[:, None])
@@ -383,6 +410,8 @@ class ShardedJoinExecutor:
         self.placement = placement            # None -> per-session default
         self.placement_strategy = placement_strategy
         self.routes = _build_routes(plan)
+        self.route_specs = {name: _route_specs(rs)
+                            for name, rs in self.routes.items()}
         self._step_cache: dict[tuple, object] = {}
         self._count_fn = None
         self.compile_count = 0          # step builds (one per distinct key)
@@ -409,34 +438,33 @@ class ShardedJoinExecutor:
     def _count_pass(self):
         """Jitted routing/histogram pass shared by every session.
 
-        One call routes ALL relations on device with the same fused
-        `_route_relation` the step uses (so placement, capacities, and the
-        step all see identical destinations) and returns each relation's
+        One call routes ALL relations on device — the `map_pack` megakernel
+        in scatter-free COUNTING mode (so placement, capacities, and the
+        step all see identical destinations) — and returns each relation's
         (n_devices, k) count matrix of routed copies per (source device,
-        wrapped LOGICAL cell) — one scatter-add histogram over dev·k + dest.
-        The session folds these tiny matrices on host: column-sums are the
-        per-cell loads LPT placement bin-packs, and folding columns through a
-        placement table yields the per-(source, destination device) counts
-        that set shuffle capacities.  The host-side numpy re-route this
-        replaces did the routing a second time per run."""
+        wrapped LOGICAL cell).  The session folds these tiny matrices on
+        host: column-sums are the per-cell loads LPT placement bin-packs,
+        and folding columns through a placement table yields the
+        per-(source, destination device) counts that set shuffle capacities.
+        This is the ONLY routing of the data prepare() performs: the staged
+        `_route_relation` histogram it replaces materialized the full
+        (n·F, w+1) tagged expansion just to throw it away (kept below as the
+        fuse_map=False oracle)."""
         if self._count_fn is None:
             k, cfg, query = self.plan.k, self.config, self.plan.query
             n_dev, routes = self.n_devices, self.routes
+            specs = self.route_specs
 
             def count_matrices(*arrs):
                 outs = []
                 for rel, a in zip(query.relations, arrs):
+                    if cfg.use_kernels and cfg.fuse_map:
+                        outs.append(kops.map_count(a, specs[rel.name], k,
+                                                   n_dev))
+                        continue
                     dest, _ = _route_relation(a, routes[rel.name],
                                               cfg.use_kernels)
-                    n = a.shape[0]
-                    per_dev = max(n // n_dev, 1)
-                    fan = dest.shape[0] // max(n, 1)
-                    dev = jnp.repeat(
-                        jnp.arange(n, dtype=jnp.int32) // per_dev, fan)
-                    idx = jnp.where(dest >= 0, dev * k + dest, n_dev * k)
-                    counts = jnp.zeros((n_dev * k + 1,),
-                                       jnp.int32).at[idx].add(1)
-                    outs.append(counts[:n_dev * k].reshape(n_dev, k))
+                    outs.append(_count_matrix(dest, a.shape[0], k, n_dev))
                 return tuple(outs)
 
             self._count_fn = jax.jit(count_matrices)
@@ -456,16 +484,26 @@ class ShardedJoinExecutor:
             return f
         routes = self.routes
 
+        specs, k = self.route_specs, self.plan.k
+
         def step(ptable, *arrs):
             local = {r.name: a for r, a in zip(query.relations, arrs)}
             frags, sh_over = {}, jnp.int32(0)
             recv_count = jnp.int32(0)
             for rel in query.relations:
-                dest, rows = _route_relation(local[rel.name], routes[rel.name],
-                                             cfg.use_kernels)
-                phys = _fold_dests(dest, ptable, cfg.use_kernels)
-                buf, over = _pack_buckets(phys, rows, n_dev, caps[rel.name],
-                                          cfg.use_kernels)
+                if cfg.use_kernels and cfg.fuse_map:
+                    # Megakernel: route -> fold -> pack, one streaming pass.
+                    buf, over = kops.map_pack(local[rel.name],
+                                              specs[rel.name], ptable, k,
+                                              n_dev, caps[rel.name])
+                else:
+                    # Staged oracle path (and the pure-jnp ref path).
+                    dest, rows = _route_relation(local[rel.name],
+                                                 routes[rel.name],
+                                                 cfg.use_kernels)
+                    phys = _fold_dests(dest, ptable, cfg.use_kernels)
+                    buf, over = _pack_buckets(phys, rows, n_dev,
+                                              caps[rel.name], cfg.use_kernels)
                 sh_over = sh_over + over
                 recv = jax.lax.all_to_all(buf, self.axis, split_axis=0,
                                           concat_axis=0, tiled=True)
@@ -526,15 +564,24 @@ class ExecutorSession:
     on same-shaped input reuses the warm executable with no recompilation and
     no host round-trips.  `run_batch(chunks)` streams new tuple chunks
     through that executable: chunks smaller than the prepared shapes are
-    padded up to them (staying on the warm path); larger chunks recompile for
-    the new shape.  Capacities and placement stay frozen at prepare-time
-    values — the overflow counters report when a later batch exceeds them
-    (raise `capacity_factor` or re-prepare)."""
+    padded up to them (staying on the warm path); a chunk LARGER than the
+    prepared shapes cannot — it compiles a fresh executable for the new
+    shape (a `UserWarning` flags it, `executor.compile_count` counts it)
+    while keeping the prepare-time capacities, which that bigger batch may
+    well overflow.  The escape hatch is to re-prepare: call
+    `session.prepare(big_data)` (or a fresh `executor.session()`) so shapes,
+    placement, and capacities are re-derived for the new size.  Capacities
+    and placement stay frozen at prepare-time values otherwise — the
+    overflow counters report when a later batch exceeds them (raise
+    `capacity_factor` or re-prepare).  `count_passes` records how many
+    routing/histogram passes prepare() ran — exactly one per prepared
+    session (zero when both `caps` and `placement` are supplied)."""
 
     def __init__(self, executor: ShardedJoinExecutor):
         self.executor = executor
         self.caps: dict[str, int] = {}
         self.placement: CellPlacement | None = None
+        self.count_passes = 0           # routing passes run by prepare()
         self._device_args: list[jnp.ndarray] | None = None
         self._ptable_dev: jnp.ndarray | None = None
         self._shapes: tuple | None = None
@@ -585,6 +632,7 @@ class ExecutorSession:
 
     def _counts(self) -> list[np.ndarray]:
         """Per-relation (n_devices, k) routed-copy count matrices (host)."""
+        self.count_passes += 1
         return [np.asarray(c, np.int64)
                 for c in self.executor._count_pass()(*self._device_args)]
 
@@ -618,7 +666,20 @@ class ExecutorSession:
                                   INVALID, sh.dtype)
                     sh = np.concatenate([sh, pad])
                 args.append(ex._upload(sh))
-        f = ex._compiled_step(tuple(a.shape for a in args), self.caps)
+        shapes = tuple(a.shape for a in args)
+        if shapes != self._shapes:
+            # A chunk larger than the prepared shapes cannot pad down: it
+            # runs off the warm path with the frozen prepare-time capacities
+            # the bigger batch may overflow, compiling a new executable if
+            # this shape is new.  Surface it every time — the escape hatch is
+            # session.prepare(new_data) (see class docstring).
+            warnings.warn(
+                f"run_batch chunk shapes {shapes} exceed the prepared "
+                f"{self._shapes}: running with frozen prepare-time "
+                f"capacities (compiles a new step for a new shape); "
+                f"re-prepare() to re-derive shapes/placement/capacities",
+                UserWarning, stacklevel=2)
+        f = ex._compiled_step(shapes, self.caps)
         out, valid, sh_over, j_over, recv = f(self._ptable_dev, *args)
         return {
             "rows": np.asarray(out).reshape(-1, out.shape[-1]),

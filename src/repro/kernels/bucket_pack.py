@@ -34,6 +34,12 @@ elsewhere; interpret mode remains available to validate the kernel body.
 
 Destinations outside [0, k) (INVALID routing padding) land in a sentinel
 bucket k that is sliced off the histogram and dropped by the scatter.
+
+The executor's map phase now runs this ranking scheme fused with routing and
+the placement fold inside the `map_pack` megakernel (kernels/map_pack.py),
+which never materializes the routed expansion this kernel would be fed;
+`bucket_pack` remains the standalone pack for pre-routed destinations and
+the staged oracle path.
 """
 from __future__ import annotations
 

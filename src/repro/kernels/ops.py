@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from . import (build_probe, bucket_pack as _bp, hash_partition as _hp,
-               route_cells as _rc, segment_histogram as _sh)
+               map_pack as _mp, route_cells as _rc, segment_histogram as _sh)
 
 INTERPRET = (os.environ.get("REPRO_PALLAS_INTERPRET", "") == "1"
              or jax.default_backend() != "tpu")
@@ -69,6 +69,28 @@ def route_cells(rows, recipe, block: int = _rc.DEFAULT_BLOCK):
 def fold_cells(dest, table, block: int = _rc.DEFAULT_BLOCK):
     """Logical->physical placement lookup — see kernels/route_cells.py."""
     return _rc.fold_cells(dest, table, block=block, interpret=INTERPRET)
+
+
+def map_pack(rows: jnp.ndarray, routes, ptable: jnp.ndarray, k: int,
+             n_dev: int, cap: int):
+    """Fused map phase (route -> fold -> pack) — see kernels/map_pack.py.
+
+    Off-TPU this routes to the megakernel's vectorized-XLA twin (not
+    interpret mode), the production hot path there; interpret-mode kernel
+    validation lives in the tests.
+    """
+    if INTERPRET:
+        return _mp.map_pack_host(rows, ptable, routes=routes, k=k,
+                                 n_dev=n_dev, cap=cap)
+    return _mp.map_pack(rows, ptable, routes=routes, k=k, n_dev=n_dev,
+                        cap=cap)
+
+
+def map_count(rows: jnp.ndarray, routes, k: int, n_src: int):
+    """Scatter-free counting mode of the megakernel — see kernels/map_pack.py."""
+    if INTERPRET:
+        return _mp.map_count_host(rows, routes=routes, k=k, n_src=n_src)
+    return _mp.map_count(rows, routes=routes, k=k, n_src=n_src)
 
 
 def bucket_pack(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int):

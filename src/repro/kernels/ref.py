@@ -131,6 +131,73 @@ def route_cells_ref(rows: jnp.ndarray,
     return cell
 
 
+def _map_route_ref(rows: jnp.ndarray, routes, k: int
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(logical (n, F), wrapped (n, F)) per-copy ids — the routing stage of
+    the map-phase oracle, one column per (route, replication offset).
+
+    `routes` is the static `kernels.map_pack.RouteSpec` nested tuple; masked
+    entries (type-constraint non-members, INVALID padding rows) are -1 in
+    both outputs.
+    """
+    n = rows.shape[0]
+    logical_cols, wrapped_cols = [], []
+    for hashed, reps, offset, eqs, notins in routes:
+        member = rows[:, 0] != jnp.int32(-1)
+        for col, val in eqs:
+            member &= rows[:, col] == val
+        for col, vals in notins:
+            hh = jnp.asarray(vals, rows.dtype)
+            member &= ~(rows[:, col][:, None] == hh[None, :]).any(axis=1)
+        base = route_cells_ref(rows, hashed)
+        for r in reps:
+            logical = base + (r + offset)
+            logical_cols.append(jnp.where(member, logical, jnp.int32(-1)))
+            wrapped_cols.append(jnp.where(member, logical % k, jnp.int32(-1)))
+    return (jnp.stack(logical_cols, axis=1), jnp.stack(wrapped_cols, axis=1))
+
+
+def map_pack_ref(rows: jnp.ndarray, ptable: jnp.ndarray, routes, k: int,
+                 n_dev: int, cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Map-phase oracle: the staged route -> fold -> pack composition.
+
+    Deliberately materializes the (n·F, w+1) tagged expansion the `map_pack`
+    megakernel exists to avoid — ground truth, not a hot path.  Returns
+    ((n_dev, cap, w+1) buffer, overflow), bit-identical to the kernel.
+    """
+    n, w = rows.shape
+    if n == 0 or not routes:
+        return (jnp.full((n_dev, cap, w + 1), jnp.int32(-1), rows.dtype),
+                jnp.int32(0))
+    logical, wrapped = _map_route_ref(rows, routes, k)
+    fanout = logical.shape[1]
+    phys = fold_cells_ref(wrapped.reshape(-1), ptable)
+    tagged = jnp.concatenate(
+        [jnp.broadcast_to(rows[:, None, :], (n, fanout, w)),
+         logical[:, :, None].astype(rows.dtype)],
+        axis=-1).reshape(n * fanout, w + 1)
+    return bucket_pack_ref(phys, tagged, n_dev, cap)
+
+
+def map_count_ref(rows: jnp.ndarray, routes, k: int, n_src: int
+                  ) -> jnp.ndarray:
+    """Counting-mode oracle: (n_src, k) routed copies per (source, cell).
+
+    Source of row i is i // (n // n_src) — the executor's sharded layout.
+    """
+    n = rows.shape[0]
+    if n == 0 or not routes:
+        return jnp.zeros((n_src, k), jnp.int32)
+    _, wrapped = _map_route_ref(rows, routes, k)
+    fanout = wrapped.shape[1]
+    flat = wrapped.reshape(-1)
+    src = jnp.repeat(jnp.arange(n, dtype=jnp.int32) // max(n // n_src, 1),
+                     fanout)
+    idx = jnp.where(flat >= 0, src * k + flat, n_src * k)
+    counts = jnp.zeros((n_src * k + 1,), jnp.int32).at[idx].add(1)
+    return counts[:n_src * k].reshape(n_src, k)
+
+
 def fold_cells_ref(dest: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     """Placement lookup oracle: physical device per wrapped logical cell.
 

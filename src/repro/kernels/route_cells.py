@@ -15,6 +15,11 @@ logical cell id up in a device-resident `CellPlacement` table (core/placement)
 so k logical cells execute on any smaller mesh.  The table is a runtime
 ARGUMENT, not a compile-time constant — re-placing cells never recompiles the
 executor step.
+
+The executor's hot path now runs both stages (and the shuffle pack) inside
+the `map_pack` megakernel (kernels/map_pack.py); these standalone kernels
+remain the staged bit-exactness oracle path and the building blocks for
+callers that need one stage in isolation.
 """
 from __future__ import annotations
 

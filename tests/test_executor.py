@@ -233,6 +233,46 @@ def test_local_join_sort_merge_matches_dense(use_kernels, seed):
         assert int(ov_s) == int(ov_d)
 
 
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_stable_argsort_locks_arrival_order(use_kernels):
+    """Regression lock for the explicit stable=True argsorts.
+
+    `_local_join` gathers right-side matches through `order_r`; with heavy
+    key duplication an unstable sort would permute equal-keyed rows and break
+    bit-identity with the dense oracle's (left row, right ARRIVAL order)
+    output.  Likewise `_pack_buckets_argsort` must keep bucket contents in
+    arrival order to stay the pack equivalence oracle.  Runs without a mesh.
+    """
+    import jax.numpy as jnp
+    from repro.core.executor import (_local_join, _local_join_dense,
+                                     _pack_buckets_argsort)
+    from repro.kernels.ref import bucket_pack_ref
+    rng = np.random.default_rng(99)
+    q = two_way()
+    n = 120
+    frags = {}
+    for rel in ("R", "S"):
+        rows = rng.integers(0, 3, size=(n, 3)).astype(np.int32)  # ~40 dups/key
+        rows[:, -1] = 0                                   # one logical cell
+        frags[rel] = jnp.asarray(rows)
+    out_s, val_s, ov_s = _local_join(frags, q, 1 << 14, use_kernels)
+    out_d, val_d, ov_d = _local_join_dense(frags, q, 1 << 14)
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_d))
+    np.testing.assert_array_equal(np.asarray(val_s), np.asarray(val_d))
+    assert int(ov_s) == int(ov_d)
+    # Argsort pack: rows of one bucket must land in arrival order.
+    k, cap = 4, 64
+    dest = jnp.asarray(rng.integers(0, k, size=n), jnp.int32)
+    rows = jnp.asarray(np.arange(n * 2, dtype=np.int32).reshape(n, 2))
+    buf_a, _ = _pack_buckets_argsort(dest, rows, k, cap)
+    buf_r, _ = bucket_pack_ref(dest, rows, k, cap)
+    np.testing.assert_array_equal(np.asarray(buf_a), np.asarray(buf_r))
+    d = np.asarray(dest)
+    for b in range(k):                                    # explicit order lock
+        want = np.asarray(rows)[d == b][:cap]
+        np.testing.assert_array_equal(np.asarray(buf_a)[b][:len(want)], want)
+
+
 def test_disjoint_domains_empty_output():
     q = two_way()
     rng = np.random.default_rng(11)

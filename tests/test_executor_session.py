@@ -100,6 +100,34 @@ def test_session_caps_override():
     assert res["shuffle_overflow"].sum() > 0
 
 
+def test_run_batch_oversized_chunk_warns_and_recompiles():
+    """A chunk larger than the prepared shapes can't ride the warm path: it
+    must WARN (not silently recompile), bump compile_count, and still be
+    exact.  The documented escape hatch — re-prepare() — restores the warm
+    path for the new size."""
+    q = two_way()
+    data = skewed_join_dataset(q, 400, 50, skew={"B": 1.4}, seed=28)
+    big = skewed_join_dataset(q, 900, 50, skew={"B": 1.4}, seed=29)
+    _, ex = _executor(data, q)
+    s = ex.session().prepare(data)
+    s.run_batch()
+    assert ex.compile_count == 1
+    with pytest.warns(UserWarning, match="exceed the prepared"):
+        res = s.run_batch(big)
+    assert ex.compile_count == 2                        # surfaced recompile
+    got = res["rows"][res["valid"]]
+    np.testing.assert_array_equal(canonical(got), reference_join(q, big))
+    # Escape hatch: re-prepare re-derives shapes/caps; no warning, warm after.
+    s.prepare(big)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        s.run_batch(big)
+    compiles = ex.compile_count
+    s.run_batch(big)
+    assert ex.compile_count == compiles                 # warm again
+
+
 def test_session_empty_plan():
     q = two_way()
     data = {"R": np.zeros((0, 2), np.int64),
