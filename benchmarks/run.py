@@ -20,6 +20,10 @@ Tables:
                       route->fold->pack path, plus counting mode vs the
                       staged count matrices and the prepare()
                       routes-data-once guarantee; emits BENCH_map.json
+  reduce_v2           join_probe radix hash join vs the sort-merge cascade:
+                      fragment size x cascade depth (3-way / 4-way chain) x
+                      zipf skew, bit-identity asserted against both oracles;
+                      emits BENCH_reduce.json
   kernel_throughput   hash_partition / match_counts / segment_histogram
   planner_latency     plan_skew_join wall time vs #HH (control-plane budget)
 """
@@ -495,6 +499,119 @@ def bench_map_scaling():
     row("map_scaling/json", 0.0, f"path={out_path}")
 
 
+def bench_reduce_v2():
+    """Reduce-phase radix hash join vs the sort-merge cascade — the PR-5
+    headline table.
+
+    Sweeps fragment size × cascade depth (3-way and 4-way chain queries) ×
+    zipf key skew; for each point the SAME per-cell fragments (tagged with 4
+    logical cell ids) run through `_local_join` in hash mode (the
+    `join_probe` host twins — the CPU production path) and in sort-merge
+    mode (the retained oracle on its fast jnp path), asserting bit-identical
+    (rows, valid, overflow) — and bit-identity against the dense-matrix
+    ground oracle at n ≤ 4096, where the O(n²) match matrix is still
+    tractable.  `cap_out` is sized from the EXACT cascade intermediate sizes
+    (reference `join_two` on host), so overflow must be zero.  Emits
+    BENCH_reduce.json; scripts/check_bench.py fails the build on any
+    non-exactness, overflow, or the hash path losing to sort-merge at
+    n ≥ 4096."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import JoinQuery, Relation, running_example
+    from repro.core.executor import _local_join, _local_join_dense
+    from repro.core.reference import join_two
+    from repro.data.synthetic import zipf_column
+
+    queries = {
+        "three_way": running_example(),
+        "four_way_chain": JoinQuery((
+            Relation("R", ("A", "B")), Relation("S", ("B", "C")),
+            Relation("T", ("C", "D")), Relation("U", ("D", "E")))),
+    }
+    n_cells = 4
+    report = {"n_cells": n_cells, "sweep": []}
+
+    def best_of(fn, reps):
+        out = fn()     # warmup / compile
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e6, out
+
+    for qname, q in queries.items():
+        shared = {a for r in q.relations for a in r.attrs
+                  if sum(a in r2.attrs for r2 in q.relations) > 1}
+        for n in (1024, 4096, 16384):
+            for alpha in (0.0, 0.8):
+                rng = np.random.default_rng(n + int(10 * alpha)
+                                            + len(q.relations))
+                frags = {}
+                for rel in q.relations:
+                    cols = [zipf_column(rng, n, 2 * n if a in shared else 1000,
+                                        alpha if a in shared else 0.0)
+                            for a in rel.attrs]
+                    cols.append(rng.integers(0, n_cells, n))   # logical cell
+                    frags[rel.name] = np.stack(cols, axis=1).astype(np.int32)
+                # Exact cascade sizes -> a tight cap that cannot overflow.
+                acc = frags[q.relations[0].name].astype(np.int64)
+                attrs = tuple(q.relations[0].attrs) + ("__cell__",)
+                sizes = []
+                for rel in q.relations[1:]:
+                    acc, attrs = join_two(acc, attrs,
+                                          frags[rel.name].astype(np.int64),
+                                          tuple(rel.attrs) + ("__cell__",))
+                    sizes.append(len(acc))
+                cap = max(1024, int(1.25 * max(sizes)))
+                jfrags = {k: jnp.asarray(v) for k, v in frags.items()}
+                f_hash = jax.jit(
+                    lambda fr, c=cap: _local_join(fr, q, c, True, True))
+                f_sort = jax.jit(
+                    lambda fr, c=cap: _local_join(fr, q, c, False, False))
+                # Best-of reps: noise robustness where the win margin is
+                # thinnest (small outputs), fewer reps only where a single
+                # rep costs seconds (the giant zipf expansions).
+                reps = 5 if cap <= (1 << 18) else 3
+                us_h, out_h = best_of(
+                    lambda: jax.block_until_ready(f_hash(jfrags)), reps)
+                us_s, out_s = best_of(
+                    lambda: jax.block_until_ready(f_sort(jfrags)), reps)
+                exact = (bool((np.asarray(out_h[0])
+                               == np.asarray(out_s[0])).all())
+                         and bool((np.asarray(out_h[1])
+                                   == np.asarray(out_s[1])).all()))
+                if n <= 4096:
+                    out_d = _local_join_dense(jfrags, q, cap)
+                    exact = (exact
+                             and bool((np.asarray(out_h[0])
+                                       == np.asarray(out_d[0])).all())
+                             and bool((np.asarray(out_h[1])
+                                       == np.asarray(out_d[1])).all())
+                             and int(out_h[2]) == int(out_d[2]))
+                entry = {
+                    "query": qname, "relations": len(q.relations), "n": n,
+                    "alpha": alpha, "cap": cap,
+                    "out_rows": int(np.asarray(out_h[1]).sum()),
+                    "hash_us": us_h, "sort_us": us_s,
+                    "speedup": us_s / max(us_h, 1e-9), "exact": exact,
+                    "overflow": int(out_h[2]),
+                    "overflow_match": int(out_h[2]) == int(out_s[2]),
+                }
+                report["sweep"].append(entry)
+                row(f"reduce_v2/{qname}/n={n}/alpha={alpha}", us_h,
+                    f"sort_us={us_s:.1f};speedup={entry['speedup']:.2f}x;"
+                    f"out_rows={entry['out_rows']};cap={cap};exact={exact};"
+                    f"overflow={entry['overflow']};"
+                    f"overflow_match={entry['overflow_match']}")
+
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_reduce.json")
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    row("reduce_v2/json", 0.0, f"path={out_path}")
+
+
 def bench_kernel_throughput():
     """Kernel wrappers (jit'd ref path on CPU; Pallas compiles on TPU)."""
     import jax
@@ -544,6 +661,7 @@ def main() -> None:
     bench_shuffle_scaling()
     bench_fold_scaling()
     bench_map_scaling()
+    bench_reduce_v2()
     bench_kernel_throughput()
     bench_planner_latency()
     print(f"# {len(ROWS)} rows")

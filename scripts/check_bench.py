@@ -41,6 +41,17 @@ docs/architecture.md readers).  Every artifact is a single JSON object:
                              routes each relation's data exactly once),
                              exact (bool)
 
+  BENCH_reduce.json
+    n_cells          int     logical cell ids tagged onto every fragment row
+    sweep            list    one entry per (query, fragment size, zipf α):
+        query, relations, n, alpha, cap, out_rows, hash_us, sort_us,
+        speedup, exact (bool — hash vs sort-merge bit-identity, AND vs the
+        dense ground oracle at n ≤ 4096), overflow (int, must be 0 — caps
+        come from exact host-side cascade sizes), overflow_match (bool)
+    Gate: every entry exact with overflow 0, and the hash path must not
+    lose to the sort-merge cascade at n ≥ 4096 (hash_us ≤ sort_us) — the
+    reduce megakernel's reason to exist.
+
 New benchmarks follow the same shape: top-level scalars for the workload, one
 list of per-sweep-point entries each carrying its own `exact`/overflow fields
 (so this script can gate them), and a `row(...)` CSV line per entry.
@@ -67,7 +78,8 @@ def _derived(derived: str) -> dict[str, str]:
 def main() -> int:
     # Delete the committed artifacts first so the missing-artifact checks
     # below prove this run REGENERATED them (not that stale copies existed).
-    for name in ("BENCH_shuffle.json", "BENCH_fold.json", "BENCH_map.json"):
+    for name in ("BENCH_shuffle.json", "BENCH_fold.json", "BENCH_map.json",
+                 "BENCH_reduce.json"):
         stale = os.path.join(_REPO, name)
         if os.path.exists(stale):
             os.remove(stale)
@@ -77,6 +89,7 @@ def main() -> int:
     bench.bench_shuffle_scaling()
     bench.bench_fold_scaling()
     bench.bench_map_scaling()
+    bench.bench_reduce_v2()
     bench.bench_kernel_throughput()
 
     failures: list[str] = []
@@ -124,6 +137,13 @@ def main() -> int:
                 failures.append(f"{name}: overflow={d['overflow']}")
             if d.get("overflow_match", "True") != "True":
                 failures.append(f"{name}: fused/staged overflow mismatch")
+        if name.startswith("reduce_v2/") and name != "reduce_v2/json":
+            if d.get("exact") != "True":
+                failures.append(f"{name}: hash path != oracles ({_d})")
+            if d.get("overflow", "0") != "0":
+                failures.append(f"{name}: overflow={d['overflow']}")
+            if d.get("overflow_match", "True") != "True":
+                failures.append(f"{name}: hash/sort overflow mismatch")
         if name == "map_scaling/prepare":
             if d.get("exact") != "True":
                 failures.append(f"{name}: non-exact session output ({_d})")
@@ -199,6 +219,34 @@ def main() -> int:
             failures.append(
                 f"BENCH_map.json: prepare ran {prep.get('count_passes')} "
                 f"routing passes (must be exactly 1)")
+
+    # The reduce table must exist, be exact and overflow-free everywhere, and
+    # the hash path must not lose to the sort-merge cascade at n ≥ 4096.
+    if not any(n.startswith("reduce_v2/") and n != "reduce_v2/json"
+               for n, _, _ in bench.ROWS):
+        failures.append("reduce_v2 table missing (reduce sweep never ran)")
+    reduce_path = os.path.join(_REPO, "BENCH_reduce.json")
+    if not os.path.exists(reduce_path):
+        failures.append(f"missing artifact {reduce_path}")
+    else:
+        report = json.load(open(reduce_path))
+        entries = report.get("sweep") or []
+        if not entries:
+            failures.append("BENCH_reduce.json: empty sweep table")
+        for e in entries:
+            tag = (f"BENCH_reduce.json {e.get('query')} n={e.get('n')} "
+                   f"alpha={e.get('alpha')}")
+            if not e.get("exact"):
+                failures.append(f"{tag}: non-exact")
+            if e.get("overflow", 1) != 0 or not e.get("overflow_match"):
+                failures.append(f"{tag}: overflow={e.get('overflow')} "
+                                f"match={e.get('overflow_match')}")
+            if e.get("n", 0) >= 4096 and \
+                    e.get("hash_us", 0) > e.get("sort_us", 0):
+                failures.append(
+                    f"{tag}: hash path {e.get('hash_us'):.0f}us slower than "
+                    f"sort-merge {e.get('sort_us'):.0f}us — the radix "
+                    f"hash-join reduce phase regressed")
 
     if failures:
         print("\nBENCH CHECK FAILED:", file=sys.stderr)

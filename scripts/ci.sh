@@ -5,9 +5,11 @@ cd "$(dirname "$0")/.."
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_bench.py
-# check_bench regenerates every BENCH_*.json (map_scaling included) and fails
-# on non-exact/overflow; the artifacts must exist afterwards.
-test -f BENCH_shuffle.json -a -f BENCH_fold.json -a -f BENCH_map.json
+# check_bench regenerates every BENCH_*.json (map_scaling and reduce_v2
+# included) and fails on non-exact/overflow/hash-path-regression; the
+# artifacts must exist afterwards.
+test -f BENCH_shuffle.json -a -f BENCH_fold.json -a -f BENCH_map.json \
+     -a -f BENCH_reduce.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_recompile.py
 
 # The documented entry points must not rot: each example asserts its own

@@ -15,8 +15,11 @@ relies on.
           oracle.
   shuffle the megakernel's (n_devices, cap, w+1) fixed-capacity buffer per
           relation goes through one `all_to_all`.
-  reduce  `_local_join`: sort-merge cascade (`segment_scan`/`run_lengths`),
-          matching only within equal logical cell ids.
+  reduce  `_local_join`: radix hash-join cascade (the `join_probe` kernel
+          family — fused key hash, carried-histogram build, key-verified
+          chained probe), matching only within equal logical cell ids.  The
+          sort-merge formulation survives (hash_reduce=False) as the
+          mid-fidelity oracle, the dense match matrix as the ground oracle.
 
 Invariants:
   * Logical cells of every residual join live in one flat id space
@@ -50,9 +53,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import ops as kops
+from ..kernels.join_probe import default_bits, probe_tables
 from ..kernels.map_pack import count_scatter
-from ..kernels.ref import (bucket_pack_ref, fold_cells_ref, run_lengths_ref,
-                           segment_scan_ref)
+from ..kernels.ref import (bucket_pack_ref, build_table_ref, fold_cells_ref,
+                           join_hash_ref, run_lengths_ref, segment_scan_ref)
 from ..launch.mesh import shard_map_compat
 from .hypercube import hash_seed
 from .placement import (CellPlacement, check_fold, modulo_placement,
@@ -74,6 +78,11 @@ class ExecutorConfig:
     use_kernels: bool = True           # hash/scan via Pallas (else jnp ref path)
     fuse_map: bool = True              # map phase via the map_pack megakernel
                                        # (else staged route->fold->pack oracle)
+    hash_reduce: bool = True           # reduce phase via the join_probe radix
+                                       # hash join (else sort-merge oracle)
+    hash_bits: int | None = None       # hash-table bits; None -> ~2·n_r
+                                       # buckets (tiny values force collision
+                                       # chains — resolution stays exact)
 
 
 @dataclass(frozen=True)
@@ -253,9 +262,44 @@ def _pack_buckets_argsort(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int
 # Reduce phase
 # ---------------------------------------------------------------------------
 
-def _lexsort_rows(keys: jnp.ndarray) -> jnp.ndarray:
-    """Stable lexicographic row order of a (n, w) key matrix (col 0 primary)."""
+def _plain_lexsort(keys: jnp.ndarray) -> jnp.ndarray:
+    """w-pass stable lexsort (col 0 primary) — the width-overflow fallback."""
     return jnp.lexsort(tuple(keys[:, j] for j in range(keys.shape[1] - 1, -1, -1)))
+
+
+def _lexsort_rows(keys: jnp.ndarray) -> jnp.ndarray:
+    """Stable lexicographic row order of a (n, w) key matrix (col 0 primary).
+
+    Narrow keys are packed into a SINGLE sort word: per-column bit widths are
+    measured at runtime (values are ≥ -3 — the executor's sentinel floor — so
+    a +3 shift makes them unsigned) and, when they sum to ≤ 31 bits, one
+    stable argsort of the packed word replaces the w XLA sort passes.  Ties
+    in the packed word are ties in every column, so stability makes the
+    permutation bit-identical to the lexsort.  31 bits is the single-word
+    budget because jax x64 is disabled repo-wide (a 64-bit pack needs
+    jax_enable_x64); wider keys take the fallback via `lax.cond` — the width
+    test is data-dependent, so both branches compile and the cheap one runs.
+    """
+    n, w = keys.shape
+    if w == 1:
+        return jnp.argsort(keys[:, 0], stable=True)
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    maxes = keys.max(axis=0)                           # (w,) runtime, ≥ -3
+    # Exact integer bit widths of (max + 3): 1 + |{b ≥ 1 : max ≥ 2^b - 3}|
+    # (compared against int32-safe thresholds — max + 3 itself may overflow).
+    thresh = jnp.asarray([(1 << b) - 3 for b in range(1, 32)], jnp.int32)
+    widths = 1 + (maxes[:, None] >= thresh[None, :]).sum(axis=1)
+    # Col 0 most significant: shift_c = Σ widths of later columns.
+    shifts = jnp.cumsum(widths[::-1])[::-1] - widths
+    total = widths.sum()
+
+    def packed(_):
+        word = ((keys + 3) << shifts[None, :]).sum(axis=1)
+        return jnp.argsort(word, stable=True)
+
+    return jax.lax.cond(total <= 31, packed, lambda _: _plain_lexsort(keys),
+                        operand=None)
 
 
 def _group_ids(left_keys: jnp.ndarray, right_keys: jnp.ndarray,
@@ -273,9 +317,58 @@ def _group_ids(left_keys: jnp.ndarray, right_keys: jnp.ndarray,
     return g[:n_l], g[n_l:]
 
 
+def _probe_sort(lk: jnp.ndarray, l_valid: jnp.ndarray, rk: jnp.ndarray,
+                r_valid: jnp.ndarray, use_kernels: bool
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(counts, lo, perm) via the sort-merge formulation — the mid-fidelity
+    oracle of the hash path (and the PR-1 reduce phase, preserved bit for
+    bit): dense-rank the union of both sides' keys (lexsort + segment_scan,
+    with distinct per-side sentinels so invalid rows never match), stable-sort
+    the right side by group id, and read per-group run lengths through ONE
+    searchsorted lookup.  Stability is load-bearing: `perm` enumerates each
+    group in right-ARRIVAL order, never rely on the default sort."""
+    n_r = rk.shape[0]
+    lks = jnp.where(l_valid[:, None], lk, jnp.int32(-2))
+    rks = jnp.where(r_valid[:, None], rk, jnp.int32(-3))
+    g_l, g_r = _group_ids(lks, rks, use_kernels)
+    order_r = jnp.argsort(g_r, stable=True)
+    sg_r = g_r[order_r]
+    if use_kernels:
+        _, _, rlen = kops.run_lengths(sg_r[:, None])
+    else:
+        _, _, rlen = run_lengths_ref(sg_r[:, None])
+    lo = jnp.searchsorted(sg_r, g_l)               # group start in sorted right
+    safe_lo = jnp.minimum(lo, n_r - 1)
+    hit = (lo < n_r) & (sg_r[safe_lo] == g_l)
+    counts = jnp.where(hit, rlen[safe_lo], 0)      # per-left-row match count
+    return counts, lo, order_r
+
+
+def _probe_hash(lk: jnp.ndarray, l_valid: jnp.ndarray, rk: jnp.ndarray,
+                r_valid: jnp.ndarray, use_kernels: bool,
+                hash_bits: int | None
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(counts, lo, perm) via the `join_probe` radix hash join: fused key
+    hash of both sides, carried-histogram compact table build over the right
+    side, key-verified chained probe — no (n_l + n_r, w) union buffer and no
+    multi-column lexsort.  `use_kernels=False` composes the kernels/ref.py
+    oracles through the same chained resolution — their one-hot rank is
+    O(n_r · 2^bits), so the default ref table is capped at 2^10 buckets:
+    collision chains deepen but stay exact (debug/test fidelity, never a
+    hot path)."""
+    if use_kernels:
+        return kops.join_probe(lk, l_valid, rk, r_valid, hash_bits)
+    bits = hash_bits or min(default_bits(rk.shape[0]), 10)
+    bl = join_hash_ref(lk, l_valid, bits)
+    br, rank, hist = build_table_ref(rk, r_valid, bits)
+    return probe_tables(lk, bl, rk, br, rank, hist, bits)
+
+
 def _local_join(frags: dict[str, jnp.ndarray], query: JoinQuery, cap_out: int,
-                use_kernels: bool) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Cascade natural join of one cell's fragments — sort-merge formulation.
+                use_kernels: bool, hash_reduce: bool = False,
+                hash_bits: int | None = None
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cascade natural join of one cell's fragments.
 
     Every fragment row carries its LOGICAL cell id as the last column; each
     cascade step joins on (shared named attributes AND equal logical cell), so
@@ -283,14 +376,15 @@ def _local_join(frags: dict[str, jnp.ndarray], query: JoinQuery, cap_out: int,
     join independently — structural exactness for wrapped residual blocks.
 
     One step, with left = accumulator (n_l rows) and right = next fragment:
-      1. dense-rank the union of both sides' keys (lexsort + segment_scan),
-         with per-side sentinels on invalid rows so they never match;
-      2. stable-sort the right side by group id; per-group run lengths via the
-         `run_lengths` kernel give each left row its match count through ONE
-         searchsorted lookup;
-      3. expand to the static `cap_out` shape by gathering from the exclusive
+      1. a probe pass over the shared key columns (incl. `__cell__`) yields
+         per-left-row match counts, group-start offsets, and a grouped
+         right-side permutation whose groups are contiguous and internally in
+         ARRIVAL order — `_probe_hash` (the `join_probe` radix hash-join
+         kernels, default) or `_probe_sort` (the retained sort-merge oracle);
+      2. expand to the static `cap_out` shape by gathering from the exclusive
          prefix sum of per-left-row counts — output order is (left row, right
-         arrival order), bit-identical to the dense-matrix baseline.
+         arrival order), bit-identical across BOTH probes and the
+         dense-matrix ground oracle.
 
     Returns (rows (cap_out, n_attrs), valid (cap_out,), overflow ())."""
     rels = list(query.relations)
@@ -305,31 +399,20 @@ def _local_join(frags: dict[str, jnp.ndarray], query: JoinQuery, cap_out: int,
         shared = [(acc_attrs.index(a), right_attrs.index(a))
                   for a in right_attrs if a in acc_attrs]   # incl. __cell__
         n_l, n_r = acc.shape[0], right.shape[0]
-        # Distinct per-side sentinels: invalid rows never match across sides.
-        lk = jnp.where(acc_valid[:, None],
-                       acc[:, jnp.asarray([l for l, _ in shared])], jnp.int32(-2))
-        rk = jnp.where(r_valid[:, None],
-                       right[:, jnp.asarray([r for _, r in shared])], jnp.int32(-3))
-        g_l, g_r = _group_ids(lk, rk, use_kernels)
-        # Stability is load-bearing: output order is (left row, right ARRIVAL
-        # order), bit-identical to the dense oracle — never rely on the
-        # default.
-        order_r = jnp.argsort(g_r, stable=True)
-        sg_r = g_r[order_r]
-        if use_kernels:
-            _, _, rlen = kops.run_lengths(sg_r[:, None])
+        lk = acc[:, jnp.asarray([l for l, _ in shared])]
+        rk = right[:, jnp.asarray([r for _, r in shared])]
+        if hash_reduce:
+            counts, lo, perm = _probe_hash(lk, acc_valid, rk, r_valid,
+                                           use_kernels, hash_bits)
         else:
-            _, _, rlen = run_lengths_ref(sg_r[:, None])
-        lo = jnp.searchsorted(sg_r, g_l)           # group start in sorted right
-        safe_lo = jnp.minimum(lo, n_r - 1)
-        hit = (lo < n_r) & (sg_r[safe_lo] == g_l)
-        counts = jnp.where(hit, rlen[safe_lo], 0)  # per-left-row match count
+            counts, lo, perm = _probe_sort(lk, acc_valid, rk, r_valid,
+                                           use_kernels)
         n_match = counts.sum()
         overflow = overflow + jnp.maximum(0, n_match - cap_out)
         off = jnp.cumsum(counts) - counts          # exclusive prefix sum
         t = jnp.arange(cap_out, dtype=jnp.int32)
         li = jnp.clip(jnp.searchsorted(off, t, side="right") - 1, 0, n_l - 1)
-        ri = order_r[jnp.clip(lo[li] + t - off[li], 0, n_r - 1)]
+        ri = perm[jnp.clip(lo[li] + t - off[li], 0, n_r - 1)]
         valid_out = t < n_match
         extra_names = [a for a in rel.attrs if a not in acc_attrs]
         extra_cols = [right_attrs.index(a) for a in extra_names]
@@ -511,7 +594,8 @@ class ShardedJoinExecutor:
                 recv_count = recv_count + (frag[:, -1] != INVALID).sum()
                 frags[rel.name] = frag
             out, valid, j_over = _local_join(frags, query, cfg.out_capacity,
-                                             cfg.use_kernels)
+                                             cfg.use_kernels, cfg.hash_reduce,
+                                             cfg.hash_bits)
             return (out[None], valid[None], sh_over[None], j_over[None],
                     recv_count[None])
 

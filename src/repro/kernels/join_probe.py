@@ -1,0 +1,433 @@
+"""Pallas kernels: reduce-phase radix hash join (the `join_probe` family).
+
+A reducer cell's local join cascades over its fragments; every cascade step
+must produce, per left (accumulator) row, its matching right rows in ARRIVAL
+order — the load-bearing output contract of `core.executor._local_join`.  The
+sort-merge formulation pays for that with a full lexsort of the left∪right
+key UNION (w sort passes over n_l + n_r rows) plus a stable argsort of the
+right side at EVERY cascade step.  This family replaces all of it with a
+radix hash join; no union buffer is ever materialized:
+
+  hash    `join_hash` — fused multiply-shift hash of ALL shared key columns
+          (named attributes + the hidden `__cell__` id) in one elementwise
+          pass: h = (Σ_c key_c · seed_c) · MULT, bucket = top `n_bits` bits.
+          Both sides hash identically; invalid rows land in a sentinel
+          bucket P = 2^n_bits that valid rows can never reach.
+  build   `build_table` — the same fused hash PLUS the carried-histogram
+          stable rank of `bucket_pack`, in ONE streaming pass over the right
+          side: TPU grids iterate sequentially, so a revisited (P + 1,)
+          histogram block accumulates bucket loads while each row reads its
+          stable within-bucket rank as carry + strict-lower-triangular local
+          count.  Bucket offsets (exclusive histogram scan) turn the ranks
+          into a COMPACT hash table: bucket p's rows sit contiguously at
+          [offs[p], offs[p] + hist[p]), in arrival order — the right-side
+          stable rank comes out of the same pass that builds the table.
+  probe   `probe_tables` — key-verified chained resolution.  Distinct keys
+          colliding in one bucket are resolved EXACTLY: each round peels the
+          chain one link — every bucket's first unresolved row is that
+          round's representative, all rows (and probing left rows) with keys
+          equal to it resolve, everything else follows the chain next round.
+          Resolving rows are assigned contiguous slots in a grouped final
+          order via segmented prefix sums (groups contiguous, arrival order
+          inside), so the step emits per-left-row match counts and
+          group-start offsets that feed the executor's existing static-shape
+          prefix-sum expansion gather unchanged.  Round count = max distinct
+          keys per bucket (+1) — O(1) expected at the default table size of
+          ~2·n_r buckets; a tiny `n_bits` forces deep chains (the
+          forced-collision test knob).
+
+Step cost drops from O((n_l + n_r) · w · log n) union sort work to
+O(n_l + n_r) streaming work per chain round.  `join_hash_host` /
+`build_table_host` are the bit-identical vectorized-XLA twins used off-TPU
+(the host rank is the proven argsort-rank math of `_pack_buckets_argsort` —
+ONE single-key int32 sort of the right side, still strictly less sorting
+than the union lexsort it replaces); `join_hash_ref` / `build_table_ref` /
+`join_probe_ref` in kernels/ref.py are the dead-simple oracles.  Output is
+bit-identical to the sort-merge path (and through it to the dense-matrix
+ground oracle); `kernels.ops` picks Pallas on TPU and the host twins
+elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MULT
+
+DEFAULT_BLOCK = 256       # rows per tile; auto-shrunk so (block, P+1) fits VMEM
+MAX_BITS = 16             # default table-size cap (2^16 buckets)
+INVALID = -1
+
+# Per-column odd multipliers of the fused key hash (kernel, host twin, and
+# ref MUST agree — the hash is a cross-side semantic contract).
+_SEED0 = 0x9E3779B1
+_SEED_STEP = 0x85EBCA77
+
+
+def col_seeds(w: int) -> tuple[int, ...]:
+    """Static odd multiply-shift seed per key column."""
+    return tuple(((_SEED0 + 2 * c * _SEED_STEP) | 1) & 0xFFFFFFFF
+                 for c in range(w))
+
+
+def default_bits(n_r: int) -> int:
+    """Default table size: ~2·n_r buckets, capped at 2^MAX_BITS."""
+    return max(1, min(MAX_BITS, (max(n_r, 2) - 1).bit_length() + 1))
+
+
+def _hash_block(keys: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """(n,) int32 bucket in [0, 2^n_bits): fused multiply-shift over columns.
+
+    Shared by the kernel bodies and the host twins; the per-column seeds
+    unroll statically (w is tiny).
+    """
+    h = jnp.zeros((keys.shape[0],), jnp.uint32)
+    for c, seed in enumerate(col_seeds(keys.shape[1])):
+        h = h + keys[:, c].astype(jnp.uint32) * jnp.uint32(seed)
+    h = h * jnp.uint32(MULT)
+    return (h >> jnp.uint32(32 - n_bits)).astype(jnp.int32)
+
+
+def _auto_block(block: int, n_bits: int) -> int:
+    """Shrink the tile so the (block, P+1) one-hot stays within ~4 MiB."""
+    return max(8, min(block, (1 << 20) // ((1 << n_bits) + 1)))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+def _join_hash_kernel(keys_ref, valid_ref, out_ref, *, n_bits: int):
+    keys = keys_ref[...]                                    # (block, w)
+    v = valid_ref[...]                                      # (block,) int32
+    b = _hash_block(keys, n_bits)
+    out_ref[...] = jnp.where(v > 0, b, jnp.int32(1 << n_bits))
+
+
+def _build_table_kernel(keys_ref, valid_ref, bkt_ref, rank_ref, hist_ref, *,
+                        n_bits: int, block: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    keys = keys_ref[...]                                    # (block, w)
+    v = valid_ref[...]                                      # (block,) int32
+    p1 = (1 << n_bits) + 1
+    d = jnp.where(v > 0, _hash_block(keys, n_bits), jnp.int32(1 << n_bits))
+    # Carried-histogram stable rank (the bucket_pack idiom): base from the
+    # running histogram, local from a strict-lower-triangular equality count.
+    carry = hist_ref[...]                                   # (P + 1,)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (block, p1), 1)
+    oh = (d[:, None] == bins).astype(jnp.int32)
+    base = (oh * carry[None, :]).sum(axis=1)                # carry[d]
+    eq = d[:, None] == d[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    local = (eq & (col < row)).astype(jnp.int32).sum(axis=1)
+    bkt_ref[...] = d
+    rank_ref[...] = base + local
+    hist_ref[...] = carry + oh.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "block", "interpret"))
+def join_hash(keys: jnp.ndarray, valid: jnp.ndarray, *, n_bits: int,
+              block: int = DEFAULT_BLOCK, interpret: bool = False
+              ) -> jnp.ndarray:
+    """(n,) int32 bucket ids; invalid rows land in the sentinel bucket P.
+
+    keys (n, w) int32; valid (n,) int32/bool — False rows get bucket
+    P = 2^n_bits, unreachable by any valid row on either side.
+    """
+    n, w = keys.shape
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    block = _auto_block(block, n_bits)
+    kp = jnp.pad(keys, ((0, -n % block), (0, 0)))
+    vp = jnp.pad(valid.astype(jnp.int32), (0, -n % block))
+    grid = (kp.shape[0] // block,)
+    out = pl.pallas_call(
+        functools.partial(_join_hash_kernel, n_bits=n_bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, w), lambda i: (i, 0)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((kp.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(kp, vp)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def join_hash_host(keys: jnp.ndarray, valid: jnp.ndarray, *, n_bits: int
+                   ) -> jnp.ndarray:
+    """`join_hash` in plain XLA — bit-identical buckets."""
+    if keys.shape[0] == 0:
+        return jnp.zeros((0,), jnp.int32)
+    return jnp.where(valid.astype(bool), _hash_block(keys, n_bits),
+                     jnp.int32(1 << n_bits))
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "block", "interpret"))
+def build_table(keys: jnp.ndarray, valid: jnp.ndarray, *, n_bits: int,
+                block: int = DEFAULT_BLOCK, interpret: bool = False
+                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(bucket (n,), rank (n,), hist (P,)) — hash + stable rank in ONE pass.
+
+    rank is the row's stable arrival rank within its bucket; hist counts
+    valid rows per bucket (the sentinel bin is dropped).  With the exclusive
+    scan of hist as bucket offsets, `offs[bucket] + rank` lays the rows out
+    as a compact per-bucket hash table in arrival order.
+    """
+    n, w = keys.shape
+    p = 1 << n_bits
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+                jnp.zeros((p,), jnp.int32))
+    block = _auto_block(block, n_bits)
+    kp = jnp.pad(keys, ((0, -n % block), (0, 0)))
+    vp = jnp.pad(valid.astype(jnp.int32), (0, -n % block))  # pads -> sentinel
+    grid = (kp.shape[0] // block,)
+    bkt, rank, hist = pl.pallas_call(
+        functools.partial(_build_table_kernel, n_bits=n_bits, block=block),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, w), lambda i: (i, 0)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=(
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((p + 1,), lambda i: (0,)),         # revisited carry
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((kp.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((kp.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((p + 1,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(kp, vp)
+    return bkt[:n], rank[:n], hist[:p]
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def build_table_host(keys: jnp.ndarray, valid: jnp.ndarray, *, n_bits: int
+                     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """`build_table` in vectorized XLA — bit-identical outputs.
+
+    The stable within-bucket rank comes from ONE single-key int32 stable
+    argsort (the `_pack_buckets_argsort` rank math) — strictly less sorting
+    than the w-pass union lexsort the hash join replaces.
+    """
+    n = keys.shape[0]
+    p = 1 << n_bits
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+                jnp.zeros((p,), jnp.int32))
+    d = join_hash_host(keys, valid, n_bits=n_bits)
+    order = jnp.argsort(d, stable=True)
+    sd = d[order]
+    start = jnp.searchsorted(sd, sd, side="left")
+    pos = jnp.arange(n, dtype=jnp.int32) - start.astype(jnp.int32)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(pos)
+    hist = jnp.zeros((p + 1,), jnp.int32).at[d].add(1)[:p]
+    return d, rank, hist
+
+
+# ---------------------------------------------------------------------------
+# Chained build + probe (shared by the kernel, host, and ref paths)
+# ---------------------------------------------------------------------------
+
+def _chain_probe(lk: jnp.ndarray, rk: jnp.ndarray, perm1: jnp.ndarray,
+                 rstart: jnp.ndarray, rend: jnp.ndarray, s_l: jnp.ndarray,
+                 l_miss: jnp.ndarray, fpos0: jnp.ndarray
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Key-verified chained resolution over a partitioned packed table.
+
+    Partition-scheme-agnostic core shared by the kernel, host, and ref
+    paths.  `perm1` maps packed position -> original right row (rows grouped
+    by hash partition, ARRIVAL order inside, invalid rows last);
+    `rstart`/`rend` give each packed row its partition's [start, end) range;
+    `s_l` is each left row's partition start (junk where `l_miss` — left
+    rows with no partition: invalid, or hash value absent from the table);
+    `fpos0` pre-assigns final slots to invalid packed rows (-1 elsewhere).
+
+    Returns (counts (n_l,), lo (n_l,), perm (n_r,)): perm is a grouped
+    permutation of the right side — every exact-key group contiguous and
+    internally in arrival order — and each left row's matches are exactly
+    perm[lo .. lo + counts), so the caller's static-shape prefix-sum
+    expansion gather works unchanged (`counts`/`lo` of rows with no match
+    are 0 and never gathered).
+
+    One `lax.while_loop` round follows every partition's collision chain one
+    link: the partition's first unresolved row (found scatter-free with a
+    cumulative-count + searchsorted trick) is the round's representative;
+    right rows with keys exactly equal to it resolve into one contiguous
+    group of final slots read straight off the round's prefix sum
+    (partitions are contiguous in packed order, so prefix-sum order IS
+    grouped order), and probing left rows with equal keys take that group's
+    (start, size).  The loop ends the moment the RIGHT side is fully
+    resolved: a left row's key, if present at all, hits in the exact round
+    its group resolves (reps enumerate the partition's distinct keys, and a
+    key can equal at most one of them), so whatever never hit has no match
+    and keeps counts = 0.  Round count = max distinct keys per partition —
+    O(1) expected at default table sizes, deep only under the
+    forced-collision tiny-bits knob.  Group layout across rounds is an
+    internal choice — output depends only on the per-left-row enumeration.
+    """
+    n_l, n_r = lk.shape[0], rk.shape[0]
+    if n_r == 0:
+        return (jnp.zeros((n_l,), jnp.int32), jnp.zeros((n_l,), jnp.int32),
+                jnp.zeros((0,), jnp.int32))
+    pk = rk[perm1]                                          # packed keys
+    s_l = jnp.clip(s_l, 0, n_r - 1)
+    lmask = ~l_miss     # invalid / absent-partition rows can never hit: an
+    # absent partition means the key exists nowhere on the right, so rep
+    # keys from the neighbouring partition s_l points into never equal it.
+    cnt0 = jnp.zeros((n_l,), jnp.int32)
+    lo0 = jnp.zeros((n_l,), jnp.int32)
+
+    def cond(state):
+        fpos, _cnt, _lo, _total = state
+        return jnp.any(fpos < 0)
+
+    def body(state):
+        fpos, cnt, lo, total = state
+        unres = fpos < 0
+        # Per packed row, its partition's first unresolved row: the
+        # (count-before-partition + 1)-th unresolved row globally.
+        cu = jnp.cumsum(unres.astype(jnp.int32))            # inclusive
+        base_u = jnp.where(rstart > 0, cu[jnp.clip(rstart - 1, 0, n_r - 1)],
+                           0)
+        pos = jnp.searchsorted(cu, base_u + 1, side="left")
+        rep = jnp.where(pos < rend, pos, n_r)               # (n_r,) per row
+        mask = unres & (pk == pk[jnp.clip(rep, 0, n_r - 1)]).all(axis=1)
+        rep_l = rep[s_l]                                    # left partitions
+        hit = lmask & (rep_l < n_r) \
+            & (lk == pk[jnp.clip(rep_l, 0, n_r - 1)]).all(axis=1)
+        # Final slots straight off the round's prefix sum: partitions are
+        # contiguous in packed order, so mask rows in prefix-sum order are
+        # already grouped (≤ 1 resolving group per partition per round).
+        pcm = jnp.cumsum(mask.astype(jnp.int32))            # inclusive
+        base_l = jnp.where(s_l > 0, pcm[jnp.clip(s_l - 1, 0, n_r - 1)], 0)
+        reach_l = pcm[jnp.clip(rend[s_l] - 1, 0, n_r - 1)]
+        fpos = jnp.where(mask, total + pcm - 1, fpos)
+        cnt = jnp.where(hit, reach_l - base_l, cnt)
+        lo = jnp.where(hit, total + base_l, lo)
+        return fpos, cnt, lo, total + pcm[-1]
+
+    fpos, cnt, lo, _t = jax.lax.while_loop(
+        cond, body, (fpos0, cnt0, lo0, jnp.int32(0)))
+    perm = jnp.zeros((n_r,), jnp.int32).at[fpos].set(perm1)
+    return cnt, lo, perm
+
+
+def _run_bounds(rid: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row [start, end) of the run of equal values in a sorted (n,)
+    array (the segment_scan_ref cummax idiom, forward + reversed)."""
+    n = rid.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    flags = jnp.concatenate([jnp.ones((1,), bool), rid[1:] != rid[:-1]])
+    start = jax.lax.cummax(jnp.where(flags, idx, jnp.int32(-1)))
+    flags_r = jnp.concatenate([jnp.ones((1,), bool),
+                               rid[::-1][1:] != rid[::-1][:-1]])
+    start_r = jax.lax.cummax(jnp.where(flags_r, idx, jnp.int32(-1)))
+    end = (n - 1) - start_r[::-1] + 1
+    return start, end
+
+
+def probe_tables(lk: jnp.ndarray, l_bkt: jnp.ndarray, rk: jnp.ndarray,
+                 r_bkt: jnp.ndarray, rank: jnp.ndarray, hist: jnp.ndarray,
+                 n_bits: int
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chained build+probe from `join_hash` (left) / `build_table` (right)
+    outputs: lays the right side out as the compact per-bucket table
+    (offs[bucket] + rank, sentinel bucket last) and runs `_chain_probe`
+    with buckets as the partitions."""
+    n_r = rk.shape[0]
+    p = 1 << n_bits
+    if n_r == 0:
+        return (jnp.zeros((lk.shape[0],), jnp.int32),
+                jnp.zeros((lk.shape[0],), jnp.int32),
+                jnp.zeros((0,), jnp.int32))
+    hist_full = jnp.concatenate(
+        [hist, (jnp.int32(n_r) - hist.sum())[None]])        # (P + 1,)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), hist_full.dtype), jnp.cumsum(hist_full)])
+    q = starts[r_bkt] + rank                                # packed position
+    qidx = jnp.arange(n_r, dtype=jnp.int32)
+    perm1 = jnp.zeros((n_r,), jnp.int32).at[q].set(qidx)    # packed -> orig
+    pb = jnp.searchsorted(starts[1:], qidx, side="right")   # packed buckets
+    rstart, rend = starts[pb], starts[pb + 1]
+    fpos0 = jnp.where(qidx >= starts[p], qidx, jnp.int32(-1))
+    l_safe = jnp.clip(l_bkt, 0, p)
+    l_miss = (l_bkt >= p) | (hist_full[l_safe] == 0)
+    return _chain_probe(lk, rk, perm1, rstart, rend, starts[l_safe], l_miss,
+                        fpos0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_bits", "block", "interpret"))
+def join_probe(lk: jnp.ndarray, l_valid: jnp.ndarray, rk: jnp.ndarray,
+               r_valid: jnp.ndarray, *, n_bits: int | None = None,
+               block: int = DEFAULT_BLOCK, interpret: bool = False
+               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Radix hash join via the Pallas kernels: (counts, lo, perm).
+
+    lk (n_l, w) / rk (n_r, w) share the same key-column order; n_bits
+    defaults to a ~2·n_r-bucket table (a tiny value forces collisions —
+    resolution stays exact, only the chains deepen).
+    """
+    bits = n_bits or default_bits(rk.shape[0])
+    bl = join_hash(lk, l_valid, n_bits=bits, block=block, interpret=interpret)
+    br, rank, hist = build_table(rk, r_valid, n_bits=bits, block=block,
+                                 interpret=interpret)
+    return probe_tables(lk, bl, rk, br, rank, hist, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits",))
+def join_probe_host(lk: jnp.ndarray, l_valid: jnp.ndarray, rk: jnp.ndarray,
+                    r_valid: jnp.ndarray, *, n_bits: int | None = None
+                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """`join_probe` on the vectorized-XLA twins (non-TPU hot path).
+
+    The packed table comes from ONE plain unstable sort of the fused
+    (hash, arrival) word — distinct words make it order-stable for free, the
+    sorted word IS (partition, original row), partition bounds fall out of
+    two run scans, and left rows locate their partition with a single-column
+    searchsorted: no union buffer, no multi-column lexsort, no stable
+    argsort, no scatter.  The hash takes every bit the word can spare
+    (30 - ceil(log2 n_r); invalid rows ride above bit 30, sorting last), so
+    partitions are far finer than the kernel's histogram table and the chain
+    loop converges in O(1) rounds; an explicit tiny `n_bits` still forces
+    deep chains for the collision tests.  Degenerate giant inputs
+    (n_r ≥ 2^29) fall back to the `build_table_host` twin.
+    """
+    n_l, n_r = lk.shape[0], rk.shape[0]
+    if n_r == 0:
+        return (jnp.zeros((n_l,), jnp.int32), jnp.zeros((n_l,), jnp.int32),
+                jnp.zeros((0,), jnp.int32))
+    idx_bits = max(n_r - 1, 1).bit_length()
+    if 30 - idx_bits < 1:
+        bits = n_bits or default_bits(n_r)
+        bl = join_hash_host(lk, l_valid, n_bits=bits)
+        br, rank, hist = build_table_host(rk, r_valid, n_bits=bits)
+        return probe_tables(lk, bl, rk, br, rank, hist, bits)
+    bits = min(n_bits, 30 - idx_bits) if n_bits else 30 - idx_bits
+    qidx = jnp.arange(n_r, dtype=jnp.int32)
+    hw_l = _hash_block(lk, bits)
+    hw_r = _hash_block(rk, bits)
+    word = jnp.where(r_valid.astype(bool),
+                     (hw_r << idx_bits)
+                     | qidx, jnp.int32(1 << 30) | qidx)
+    sword = jnp.sort(word)
+    perm1 = sword & ((1 << idx_bits) - 1)                   # packed -> orig
+    rid = sword >> idx_bits                  # partitions; invalid ride last
+    rstart, rend = _run_bounds(rid)
+    fpos0 = jnp.where(rid >= (1 << bits), qidx, jnp.int32(-1))
+    s_l = jnp.searchsorted(rid, hw_l, side="left")
+    exists = (s_l < n_r) & (rid[jnp.clip(s_l, 0, n_r - 1)] == hw_l)
+    l_miss = ~l_valid.astype(bool) | ~exists
+    return _chain_probe(lk, rk, perm1, rstart, rend, s_l, l_miss, fpos0)

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from . import (build_probe, bucket_pack as _bp, hash_partition as _hp,
-               map_pack as _mp, route_cells as _rc, segment_histogram as _sh)
+               join_probe as _jp, map_pack as _mp, route_cells as _rc,
+               segment_histogram as _sh)
 
 INTERPRET = (os.environ.get("REPRO_PALLAS_INTERPRET", "") == "1"
              or jax.default_backend() != "tpu")
@@ -91,6 +92,38 @@ def map_count(rows: jnp.ndarray, routes, k: int, n_src: int):
     if INTERPRET:
         return _mp.map_count_host(rows, routes=routes, k=k, n_src=n_src)
     return _mp.map_count(rows, routes=routes, k=k, n_src=n_src)
+
+
+def join_hash(keys: jnp.ndarray, valid: jnp.ndarray, n_bits: int):
+    """Fused multi-column bucket hash — see kernels/join_probe.py.
+
+    Off-TPU this routes to the bit-identical XLA twin (not interpret mode),
+    like its siblings; interpret-mode validation lives in the tests.
+    """
+    if INTERPRET:
+        return _jp.join_hash_host(keys, valid, n_bits=n_bits)
+    return _jp.join_hash(keys, valid, n_bits=n_bits)
+
+
+def build_table(keys: jnp.ndarray, valid: jnp.ndarray, n_bits: int):
+    """Hash + carried-histogram rank in one pass — see kernels/join_probe.py.
+
+    Off-TPU this routes to the vectorized-XLA twin (not interpret mode), the
+    production hot path there; interpret-mode validation lives in the tests.
+    """
+    if INTERPRET:
+        return _jp.build_table_host(keys, valid, n_bits=n_bits)
+    return _jp.build_table(keys, valid, n_bits=n_bits)
+
+
+def join_probe(lk: jnp.ndarray, l_valid: jnp.ndarray, rk: jnp.ndarray,
+               r_valid: jnp.ndarray, n_bits: int | None = None):
+    """Reduce-phase radix hash join (counts, lo, perm) — see
+    kernels/join_probe.py.  Off-TPU the hash/rank legs run as the
+    vectorized-XLA twins, the production hot path there."""
+    if INTERPRET:
+        return _jp.join_probe_host(lk, l_valid, rk, r_valid, n_bits=n_bits)
+    return _jp.join_probe(lk, l_valid, rk, r_valid, n_bits=n_bits)
 
 
 def bucket_pack(dest: jnp.ndarray, rows: jnp.ndarray, k: int, cap: int):

@@ -198,6 +198,53 @@ def map_count_ref(rows: jnp.ndarray, routes, k: int, n_src: int
     return counts[:n_src * k].reshape(n_src, k)
 
 
+def join_hash_ref(keys: jnp.ndarray, valid: jnp.ndarray, n_bits: int
+                  ) -> jnp.ndarray:
+    """Fused multi-column bucket hash of the `join_probe` family.
+
+    h = (Σ_c key_c · seed_c) · MULT over uint32, bucket = top n_bits bits;
+    seed_c = (0x9E3779B1 + 2c·0x85EBCA77) | 1.  Invalid rows land in the
+    sentinel bucket 2^n_bits.  The formula is a cross-side contract — the
+    kernel, host twin, and this oracle must agree bit for bit.
+    """
+    h = jnp.zeros((keys.shape[0],), jnp.uint32)
+    for c in range(keys.shape[1]):
+        seed = ((0x9E3779B1 + 2 * c * 0x85EBCA77) | 1) & 0xFFFFFFFF
+        h = h + keys[:, c].astype(jnp.uint32) * jnp.uint32(seed)
+    h = (h * jnp.uint32(MULT)) >> jnp.uint32(32 - n_bits)
+    return jnp.where(valid.astype(bool), h.astype(jnp.int32),
+                     jnp.int32(1 << n_bits))
+
+
+def build_table_ref(keys: jnp.ndarray, valid: jnp.ndarray, n_bits: int
+                    ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(bucket, stable within-bucket rank, histogram) — one-hot cumsum.
+
+    Ground truth for the `build_table` kernel: O(n·P), dead simple.
+    """
+    d = join_hash_ref(keys, valid, n_bits)
+    rank, hist = bucket_rank_ref(d, 1 << n_bits)
+    return d, rank, hist
+
+
+def join_probe_ref(lk: jnp.ndarray, l_valid: jnp.ndarray, rk: jnp.ndarray,
+                   r_valid: jnp.ndarray, cap: int
+                   ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Dense probe oracle: the expanded (li, ri, valid) match pairs.
+
+    Enumerates all (left, right) exact-key matches in (left row, right
+    ARRIVAL order) — the output contract `join_probe`'s (counts, lo, perm)
+    must reproduce through the prefix-sum expansion gather.  O(n_l·n_r).
+    """
+    n_r = rk.shape[0]
+    match = l_valid.astype(bool)[:, None] & r_valid.astype(bool)[None, :]
+    match &= (lk[:, None, :] == rk[None, :, :]).all(axis=-1)
+    n_match = match.sum()
+    flat = jnp.nonzero(match.reshape(-1), size=cap, fill_value=0)[0]
+    li, ri = flat // n_r, flat % n_r
+    return li, ri, jnp.arange(cap) < n_match
+
+
 def fold_cells_ref(dest: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     """Placement lookup oracle: physical device per wrapped logical cell.
 

@@ -209,10 +209,31 @@ def test_route_relation_matches_numpy_router(use_kernels):
         np.testing.assert_array_equal(canonical(got), canonical(expect))
 
 
+def _assert_local_join_parity(frags, q, caps):
+    """Bit-parity of `_local_join` across the dense ground oracle, the
+    sort-merge mid-fidelity oracle, and the radix hash path — every
+    use_kernels combination, plus a forced-collision tiny hash table."""
+    from repro.core.executor import _local_join, _local_join_dense
+    for cap in caps:
+        out_d, val_d, ov_d = _local_join_dense(frags, q, cap)
+        for use_kernels in (False, True):
+            for hash_reduce, bits in [(False, None), (True, None), (True, 1)]:
+                out, val, ov = _local_join(frags, q, cap, use_kernels,
+                                           hash_reduce, bits)
+                tag = f"cap={cap} kernels={use_kernels} " \
+                      f"hash={hash_reduce} bits={bits}"
+                np.testing.assert_array_equal(
+                    np.asarray(out), np.asarray(out_d), err_msg=tag)
+                np.testing.assert_array_equal(
+                    np.asarray(val), np.asarray(val_d), err_msg=tag)
+                assert int(ov) == int(ov_d), tag
+
+
 @pytest.mark.parametrize("use_kernels", [False, True])
+@pytest.mark.parametrize("hash_reduce", [False, True])
 @pytest.mark.parametrize("seed", [0, 1])
-def test_local_join_sort_merge_matches_dense(use_kernels, seed):
-    """Sort-merge reduce phase is bit-identical to the dense-matrix oracle."""
+def test_local_join_probes_match_dense(use_kernels, hash_reduce, seed):
+    """Both probe formulations are bit-identical to the dense-matrix oracle."""
     import jax.numpy as jnp
     from repro.core import running_example
     from repro.core.executor import _local_join, _local_join_dense
@@ -226,11 +247,93 @@ def test_local_join_sort_merge_matches_dense(use_kernels, seed):
         rows[rng.random(n) < 0.25] = -1                   # invalid rows
         frags[rel] = jnp.asarray(rows)
     for cap in (16, 4096):                                # overflow + slack
-        out_s, val_s, ov_s = _local_join(frags, q, cap, use_kernels)
+        out_s, val_s, ov_s = _local_join(frags, q, cap, use_kernels,
+                                         hash_reduce)
         out_d, val_d, ov_d = _local_join_dense(frags, q, cap)
         np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_d))
         np.testing.assert_array_equal(np.asarray(val_s), np.asarray(val_d))
         assert int(ov_s) == int(ov_d)
+
+
+def test_local_join_cap1_fragments():
+    """Degenerate cap-1 fragments: one row per relation, cap_out down to 1."""
+    import jax.numpy as jnp
+    q = two_way()
+    match = {"R": jnp.asarray([[5, 7, 0]], jnp.int32),
+             "S": jnp.asarray([[7, 9, 0]], jnp.int32)}
+    nomatch = {"R": jnp.asarray([[5, 7, 0]], jnp.int32),
+               "S": jnp.asarray([[8, 9, 0]], jnp.int32)}
+    _assert_local_join_parity(match, q, caps=(1, 4))
+    _assert_local_join_parity(nomatch, q, caps=(1, 4))
+
+
+def test_local_join_all_invalid_right():
+    """An all-invalid right fragment must produce zero matches on every path
+    (the `safe_lo = minimum(lo, n_r - 1)` / `hit` masking edge)."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(5)
+    q = two_way()
+    frags = {
+        "R": jnp.asarray(rng.integers(0, 4, (30, 3)), jnp.int32),
+        "S": jnp.asarray(np.full((20, 3), -1), jnp.int32),
+    }
+    _assert_local_join_parity(frags, q, caps=(8, 128))
+    from repro.core.executor import _local_join
+    _, valid, over = _local_join(frags, q, 128, True, True)
+    assert int(np.asarray(valid).sum()) == 0 and int(over) == 0
+
+
+def test_local_join_all_invalid_accumulator_mid_cascade():
+    """Disjoint R/S keys make step 1 emit zero rows; step 2 then joins an
+    ALL-INVALID accumulator against a live T fragment — every path must
+    agree bit for bit (and emit nothing)."""
+    import jax.numpy as jnp
+    from repro.core import running_example
+    rng = np.random.default_rng(6)
+    q = running_example()
+    frags = {}
+    for rel, n, lo_v in [("R", 25, 0), ("S", 35, 50), ("T", 15, 0)]:
+        w = len(q.relation(rel).attrs)
+        rows = rng.integers(lo_v, lo_v + 8, size=(n, w + 1)).astype(np.int32)
+        rows[:, -1] = 0                                   # one logical cell
+        frags[rel] = jnp.asarray(rows)
+    _assert_local_join_parity(frags, q, caps=(4, 256))
+    from repro.core.executor import _local_join
+    _, valid, over = _local_join(frags, q, 256, True, True)
+    assert int(np.asarray(valid).sum()) == 0 and int(over) == 0
+
+
+def test_lexsort_rows_packs_narrow_keys():
+    """`_lexsort_rows` single-word pack is bit-identical to the plain lexsort
+    on narrow keys, and falls back on width overflow (wide values)."""
+    import jax.numpy as jnp
+    from repro.core.executor import _lexsort_rows, _plain_lexsort
+    rng = np.random.default_rng(8)
+    for hi in (5, 1 << 10, 1 << 20, (1 << 30) + 7):       # last: overflow
+        keys = rng.integers(-3, hi, (257, 3)).astype(np.int32)
+        got = np.asarray(_lexsort_rows(jnp.asarray(keys)))
+        want = np.asarray(_plain_lexsort(jnp.asarray(keys)))
+        np.testing.assert_array_equal(got, want, err_msg=f"hi={hi}")
+    # Heavy duplication: stability of the packed sort is load-bearing.
+    keys = rng.integers(0, 2, (301, 4)).astype(np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(_lexsort_rows(jnp.asarray(keys))),
+        np.asarray(_plain_lexsort(jnp.asarray(keys))))
+
+
+def test_executor_hash_and_sort_configs_agree():
+    """End-to-end: hash_reduce True/False (and a forced-collision table)
+    produce identical result sets, both equal to the reference join."""
+    q = two_way()
+    data = skewed_join_dataset(q, 400, 40, skew={"B": 1.5}, seed=13)
+    plan = plan_skew_join(q, data, 8)
+    expect = reference_join(q, data)
+    for cfg in (ExecutorConfig(out_capacity=32768, hash_reduce=True),
+                ExecutorConfig(out_capacity=32768, hash_reduce=False),
+                ExecutorConfig(out_capacity=32768, hash_reduce=True,
+                               hash_bits=2)):
+        got = ShardedJoinExecutor(plan, _mesh(), config=cfg).result_rows(data)
+        np.testing.assert_array_equal(canonical(got), expect)
 
 
 @pytest.mark.parametrize("use_kernels", [False, True])
