@@ -24,6 +24,11 @@ Tables:
                       fragment size x cascade depth (3-way / 4-way chain) x
                       zipf skew, bit-identity asserted against both oracles;
                       emits BENCH_reduce.json
+  recover_scaling     self-healing sessions under injected faults (ft/chaos):
+                      capacity overflow -> bounded bucket-aligned retry,
+                      device loss -> survivor re-fold, straggler -> eviction;
+                      recovery must be bit-exact and retries/re-folds must
+                      compile zero new executables; emits BENCH_recover.json
   kernel_throughput   hash_partition / match_counts / segment_histogram
   planner_latency     plan_skew_join wall time vs #HH (control-plane budget)
 """
@@ -612,6 +617,159 @@ def bench_reduce_v2():
     row("reduce_v2/json", 0.0, f"path={out_path}")
 
 
+def bench_recover_scaling():
+    """Self-healing sessions under injected faults — the robustness table.
+
+    Three deterministic chaos scenarios (ft/chaos.py) against the fault-free
+    `reference_join` oracle; the gate (scripts/check_bench.py) fails the
+    build on any non-exact recovery, a retry count above the policy bound,
+    or a retry/re-fold that compiled a new executable:
+
+      overflow_retry   caps squeezed to 30%: `run_with_retry` escalates on
+                       the capacity-bucket grid until clean; a second
+                       session walking the SAME ladder must compile nothing;
+      device_loss      one device stops heartbeating: the virtual clock ages
+                       it to FAILED, it is evicted, cells re-fold over the 7
+                       survivors (traced placement: zero recompile), it
+                       receives zero rows, output bit-exact;
+      straggler_evict  one device reports 30 s steps: two strikes and the
+                       watchdog evicts it through the same re-fold path.
+
+    Emits BENCH_recover.json."""
+    import jax
+    if len(jax.devices()) < 8:
+        row("recover_scaling/skipped", 0.0, "needs 8 devices")
+        return
+    from repro.core import canonical, plan_skew_join, reference_join, two_way
+    from repro.core.executor import (ExecutorConfig, RetryPolicy,
+                                     ShardedJoinExecutor)
+    from repro.data import skewed_join_dataset
+    from repro.ft import ChaosInjector
+    from repro.launch.mesh import make_mesh_compat
+    from repro.serve import SelfHealingSession
+
+    n_dev = 8
+    mesh = make_mesh_compat((n_dev,), ("cells",))
+    q = two_way()
+    data = skewed_join_dataset(q, 3_000, 1_500, skew={"B": 1.2}, seed=41)
+    expect = reference_join(q, data)
+    policy = RetryPolicy()
+    report = {"n_devices": n_dev, "workload": {
+        "query": str(q), "n_per_relation": 3_000, "domain": 1_500,
+        "zipf_B": 1.2, "ref_rows": len(expect)}, "scenarios": {}}
+
+    def _exact(res):
+        got = res["rows"][res["valid"]]
+        return (len(got) == len(expect)
+                and bool((canonical(got) == expect).all()))
+
+    def _executor():
+        plan = plan_skew_join(q, data, 32)
+        return ShardedJoinExecutor(plan, mesh,
+                                   config=ExecutorConfig(out_capacity=1 << 18))
+
+    # -- overflow_retry ------------------------------------------------------
+    ex = _executor()
+
+    def healed_walk():
+        chaos = ChaosInjector(n_dev, seed=0)
+        chaos.squeeze_caps(0.3)
+        eng = SelfHealingSession(ex, retry=policy, chaos=chaos).prepare(data)
+        t0 = time.perf_counter()
+        res = eng.run_batch()
+        return (time.perf_counter() - t0) * 1e6, eng, res
+
+    us_first, eng, res = healed_walk()
+    builds_after_first = ex.compile_count
+    us_second, eng2, res2 = healed_walk()
+    baseline = ex.session().prepare(data)       # fault-free caps
+    baseline.run_batch()
+    us_clean, _ = _timeit(lambda: baseline.run_batch(), reps=3)
+    entry = {
+        "retries": eng.stats["retries"],
+        "retry_bound": policy.max_retries,
+        "escalations": eng.stats["escalations"],
+        "exact": _exact(res) and _exact(res2),
+        "residual_overflow": int(res["shuffle_overflow"].sum()
+                                 + res["join_overflow"].sum()),
+        "new_compiles_on_retry": ex.compile_count - builds_after_first,
+        "healed_us": us_second, "clean_warm_us": us_clean,
+        "healing_overhead": us_second / max(us_clean, 1e-9),
+    }
+    report["scenarios"]["overflow_retry"] = entry
+    row("recover_scaling/overflow_retry", us_second,
+        f"retries={entry['retries']};bound={entry['retry_bound']};"
+        f"exact={entry['exact']};overflow={entry['residual_overflow']};"
+        f"new_compiles_on_retry={entry['new_compiles_on_retry']};"
+        f"overhead_vs_clean={entry['healing_overhead']:.2f}x")
+
+    # -- device_loss ---------------------------------------------------------
+    ex = _executor()
+    dead = 3
+    chaos = ChaosInjector(n_dev, seed=0)
+    chaos.drop_heartbeats(dead)
+    eng = SelfHealingSession(ex, chaos=chaos, heartbeat_timeout_s=2.5,
+                             suspect_timeout_s=1.5).prepare(data)
+    exact = _exact(eng.run_batch())
+    batches_to_evict = 1
+    while eng.evicted == [] and batches_to_evict < 16:
+        exact = exact and _exact(eng.run_batch())
+        batches_to_evict += 1
+    compiles_before = ex.compile_count
+    t0 = time.perf_counter()
+    res = eng.run_batch()                       # first degraded-mode batch
+    degraded_us = (time.perf_counter() - t0) * 1e6
+    entry = {
+        "evicted": list(eng.evicted),
+        "batches_to_evict": batches_to_evict,
+        "refolds": eng.refolds,
+        "refold_compiles": eng.refold_compiles,
+        "degraded_compiles": ex.compile_count - compiles_before,
+        "recv_on_evicted": int(res["recv_counts"][dead]),
+        "exact": exact and _exact(res),
+        "degraded_us": degraded_us,
+    }
+    report["scenarios"]["device_loss"] = entry
+    row("recover_scaling/device_loss", degraded_us,
+        f"evicted={entry['evicted']};batches_to_evict={batches_to_evict};"
+        f"refold_compiles={entry['refold_compiles']};"
+        f"degraded_compiles={entry['degraded_compiles']};"
+        f"recv_on_evicted={entry['recv_on_evicted']};exact={entry['exact']}")
+
+    # -- straggler_evict -----------------------------------------------------
+    ex = _executor()
+    slow = 5
+    chaos = ChaosInjector(n_dev, seed=0)
+    chaos.delay_device(slow, 30.0)
+    eng = SelfHealingSession(ex, chaos=chaos, straggler_threshold=1.5,
+                             evict_after=2).prepare(data)
+    exact = True
+    batches_to_evict = 0
+    while eng.evicted == [] and batches_to_evict < 8:
+        exact = exact and _exact(eng.run_batch())
+        batches_to_evict += 1
+    res = eng.run_batch()
+    entry = {
+        "evicted": list(eng.evicted),
+        "batches_to_evict": batches_to_evict,
+        "refolds": eng.refolds,
+        "refold_compiles": eng.refold_compiles,
+        "recv_on_evicted": int(res["recv_counts"][slow]),
+        "exact": exact and _exact(res),
+    }
+    report["scenarios"]["straggler_evict"] = entry
+    row("recover_scaling/straggler_evict", 0.0,
+        f"evicted={entry['evicted']};batches_to_evict={batches_to_evict};"
+        f"refold_compiles={entry['refold_compiles']};"
+        f"recv_on_evicted={entry['recv_on_evicted']};exact={entry['exact']}")
+
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_recover.json")
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    row("recover_scaling/json", 0.0, f"path={out_path}")
+
+
 def bench_kernel_throughput():
     """Kernel wrappers (jit'd ref path on CPU; Pallas compiles on TPU)."""
     import jax
@@ -662,6 +820,7 @@ def main() -> None:
     bench_fold_scaling()
     bench_map_scaling()
     bench_reduce_v2()
+    bench_recover_scaling()
     bench_kernel_throughput()
     bench_planner_latency()
     print(f"# {len(ROWS)} rows")

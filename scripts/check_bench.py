@@ -52,6 +52,24 @@ docs/architecture.md readers).  Every artifact is a single JSON object:
     lose to the sort-merge cascade at n ≥ 4096 (hash_us ≤ sort_us) — the
     reduce megakernel's reason to exist.
 
+  BENCH_recover.json
+    n_devices        int     physical mesh size
+    workload         object  query, n_per_relation, domain, zipf_B, ref_rows
+    scenarios        object  three entries (ft/chaos.py fault injection):
+        overflow_retry   retries, retry_bound, escalations, exact (bool),
+                         residual_overflow (int), new_compiles_on_retry
+                         (int), healed_us, clean_warm_us, healing_overhead
+        device_loss      evicted (list), batches_to_evict, refolds,
+                         refold_compiles, degraded_compiles,
+                         recv_on_evicted (int), exact (bool), degraded_us
+        straggler_evict  evicted (list), batches_to_evict, refolds,
+                         refold_compiles, recv_on_evicted, exact (bool)
+    Gate: every scenario recovers bit-exact; retries stay within the policy
+    bound with zero residual overflow; a retry ladder already walked and a
+    post-eviction re-fold compile ZERO new executables; every scenario
+    actually evicts/retries (a chaos run that injected nothing must not
+    pass); the evicted device receives zero rows.
+
 New benchmarks follow the same shape: top-level scalars for the workload, one
 list of per-sweep-point entries each carrying its own `exact`/overflow fields
 (so this script can gate them), and a `row(...)` CSV line per entry.
@@ -79,7 +97,7 @@ def main() -> int:
     # Delete the committed artifacts first so the missing-artifact checks
     # below prove this run REGENERATED them (not that stale copies existed).
     for name in ("BENCH_shuffle.json", "BENCH_fold.json", "BENCH_map.json",
-                 "BENCH_reduce.json"):
+                 "BENCH_reduce.json", "BENCH_recover.json"):
         stale = os.path.join(_REPO, name)
         if os.path.exists(stale):
             os.remove(stale)
@@ -90,6 +108,7 @@ def main() -> int:
     bench.bench_fold_scaling()
     bench.bench_map_scaling()
     bench.bench_reduce_v2()
+    bench.bench_recover_scaling()
     bench.bench_kernel_throughput()
 
     failures: list[str] = []
@@ -247,6 +266,65 @@ def main() -> int:
                     f"{tag}: hash path {e.get('hash_us'):.0f}us slower than "
                     f"sort-merge {e.get('sort_us'):.0f}us — the radix "
                     f"hash-join reduce phase regressed")
+
+    # The recover table must exist and prove the self-healing contracts:
+    # bit-exact recovery, bounded retries, and zero compiles on retry/re-fold.
+    if not any(n.startswith("recover_scaling/") and "skipped" not in n
+               for n, _, _ in bench.ROWS):
+        failures.append(
+            "recover_scaling table missing (needs 8 devices — check "
+            "XLA_FLAGS xla_force_host_platform_device_count)")
+    recover_path = os.path.join(_REPO, "BENCH_recover.json")
+    if not os.path.exists(recover_path):
+        failures.append(f"missing artifact {recover_path}")
+    else:
+        report = json.load(open(recover_path))
+        scen = report.get("scenarios") or {}
+        for name in ("overflow_retry", "device_loss", "straggler_evict"):
+            e = scen.get(name) or {}
+            if not e:
+                failures.append(f"BENCH_recover.json: scenario {name} missing")
+                continue
+            if not e.get("exact"):
+                failures.append(
+                    f"BENCH_recover.json {name}: recovery not bit-exact")
+        ov = scen.get("overflow_retry") or {}
+        if ov.get("retries", 0) < 1:
+            failures.append(
+                "BENCH_recover.json overflow_retry: chaos never forced a "
+                "retry (the scenario proved nothing)")
+        if ov.get("retries", 10**9) > ov.get("retry_bound", 0):
+            failures.append(
+                f"BENCH_recover.json overflow_retry: {ov.get('retries')} "
+                f"retries exceeded the policy bound {ov.get('retry_bound')}")
+        if ov.get("residual_overflow", 1) != 0:
+            failures.append(
+                f"BENCH_recover.json overflow_retry: delivered result still "
+                f"overflowed ({ov.get('residual_overflow')})")
+        if ov.get("new_compiles_on_retry", 1) != 0:
+            failures.append(
+                f"BENCH_recover.json overflow_retry: a retry ladder already "
+                f"walked compiled {ov.get('new_compiles_on_retry')} new "
+                f"executables (capacity bucketing regressed)")
+        for name in ("device_loss", "straggler_evict"):
+            e = scen.get(name) or {}
+            if not e.get("evicted"):
+                failures.append(
+                    f"BENCH_recover.json {name}: no device was evicted "
+                    f"(the fault never fired)")
+            if e.get("refold_compiles", 1) != 0:
+                failures.append(
+                    f"BENCH_recover.json {name}: re-fold left its capacity "
+                    f"bucket ({e.get('refold_compiles')} compiles; traced "
+                    f"placement should recompile nothing)")
+            if e.get("recv_on_evicted", 1) != 0:
+                failures.append(
+                    f"BENCH_recover.json {name}: evicted device still "
+                    f"received {e.get('recv_on_evicted')} rows")
+        if (scen.get("device_loss") or {}).get("degraded_compiles", 1) != 0:
+            failures.append(
+                "BENCH_recover.json device_loss: first degraded-mode batch "
+                "recompiled (placement must be a traced argument)")
 
     if failures:
         print("\nBENCH CHECK FAILED:", file=sys.stderr)

@@ -8,7 +8,11 @@ in the traced function's own cache.  Asserted two ways:
     across repeat run_batch calls, including fresh same-shaped chunks and a
     second session over the same executor;
   * the compiled step's `_cache_size()` — jax's traced-call counter for the
-    cached executable stays at 1 (no retrace, hence no recompile).
+    cached executable stays at 1 (no retrace, hence no recompile);
+  * retry-within-a-bucket — an overflow-retry escalation ladder the executor
+    has already walked (same shapes, same start caps on the capacity-bucket
+    grid) compiles ZERO new executables when a second session walks it again
+    (the self-healing contract: retries are warm, not recompiles).
 
 Exit 1 on any violation.  Usage:  python scripts/check_recompile.py
 """
@@ -63,6 +67,34 @@ def main() -> int:
             f"traced-fn cache grew: {cold_traces} -> {cache_size()} "
             f"(want a single cached executable)")
 
+    # Retry ladder warmth: two sessions start from the SAME explicit tiny
+    # caps (on the bucket grid) and escalate through run_with_retry.  The
+    # first walk compiles one step per rung; the second must compile none.
+    probe = ex.session().prepare(data)
+    tiny = {r.name: max(2, session.caps[r.name] // 8)
+            for r in q.relations}
+
+    def walk():
+        s = ex.session().prepare(data, caps=dict(tiny),
+                                 placement=probe.placement)
+        s.run_with_retry()
+        return s.stats["retries"]
+
+    retries_first = walk()
+    builds_after_first = ex.compile_count
+    retries_second = walk()
+    if retries_first < 1:
+        failures.append("retry-ladder scenario never overflowed "
+                        "(tiny caps failed to force a retry)")
+    if retries_second != retries_first:
+        failures.append(
+            f"retry ladder not deterministic: {retries_first} then "
+            f"{retries_second} retries from identical start caps")
+    if ex.compile_count != builds_after_first:
+        failures.append(
+            f"retry-within-a-bucket recompiled: second ladder walk built "
+            f"{ex.compile_count - builds_after_first} new steps (want 0)")
+
     if failures:
         print("RECOMPILE GUARD FAILED:", file=sys.stderr)
         for f in failures:
@@ -70,7 +102,8 @@ def main() -> int:
         return 1
     traces = cache_size() if cache_size else "untracked"
     print(f"# recompile guard ok (1 step build, {traces} cached trace "
-          f"across 4 warm calls)")
+          f"across 4 warm calls; retry ladder of {retries_first} retries "
+          f"warm on the second walk)")
     return 0
 
 

@@ -71,6 +71,112 @@ INVALID = -1
 _STEP_CACHE_MAX = 8
 
 
+# ---------------------------------------------------------------------------
+# Error taxonomy (the fault-tolerance layer's structured failures)
+# ---------------------------------------------------------------------------
+
+class ExecutorError(RuntimeError):
+    """Base of the executor's structured failures (all are RuntimeErrors so
+    pre-taxonomy callers catching RuntimeError keep working)."""
+
+
+class InputValidationError(ExecutorError):
+    """A relation's tuples violate the data-plane contract (integer 2-D,
+    values ≥ -1, int32-representable).  Raised BEFORE upload — corrupted
+    rows must never reach the routing kernels, whose -1 sentinel they would
+    alias."""
+
+
+class CapacityOverflowError(ExecutorError):
+    """A static capacity was exceeded and rows were dropped.
+
+    Carries the full per-device, per-phase breakdown: `shuffle_by_rel` is the
+    (n_devices, n_relations) dropped-copy count of the shuffle pack,
+    `join_overflow` the (n_devices,) dropped-result count of the reduce
+    cascade, `relations` the column labels of `shuffle_by_rel`.  The message
+    renders the non-zero entries so the failing (device, phase, relation)
+    coordinates are visible without a debugger."""
+
+    def __init__(self, msg: str, shuffle_by_rel: np.ndarray,
+                 join_overflow: np.ndarray, relations: tuple[str, ...]):
+        super().__init__(msg)
+        self.shuffle_by_rel = shuffle_by_rel
+        self.join_overflow = join_overflow
+        self.relations = relations
+
+    @classmethod
+    def from_result(cls, result: Mapping[str, np.ndarray],
+                    relations: tuple[str, ...],
+                    hint: str = "raise capacity_factor/out_capacity or "
+                                "retry via run_with_retry()"
+                    ) -> "CapacityOverflowError":
+        sh = np.asarray(result["shuffle_overflow_by_rel"], np.int64)
+        jo = np.asarray(result["join_overflow"], np.int64)
+        lines = []
+        for dev in range(sh.shape[0]):
+            parts = [f"shuffle[{rel}]={int(sh[dev, r])}"
+                     for r, rel in enumerate(relations) if sh[dev, r]]
+            if jo[dev]:
+                parts.append(f"join={int(jo[dev])}")
+            if parts:
+                lines.append(f"  dev {dev}: " + ", ".join(parts))
+        msg = (f"capacity overflow: shuffle={int(sh.sum())} "
+               f"join={int(jo.sum())}; per-device breakdown:\n"
+               + "\n".join(lines) + f"\n{hint}")
+        return cls(msg, sh, jo, relations)
+
+
+class RetryBudgetExceededError(CapacityOverflowError):
+    """Bounded retry exhausted its budget and the last attempt still
+    overflowed — capacities escalated `attempts` times without absorbing the
+    load (the data plane refuses to loop forever)."""
+
+    def __init__(self, msg: str, shuffle_by_rel: np.ndarray,
+                 join_overflow: np.ndarray, relations: tuple[str, ...],
+                 attempts: int):
+        super().__init__(msg, shuffle_by_rel, join_overflow, relations)
+        self.attempts = attempts
+
+
+class DeviceLossError(ExecutorError):
+    """Degraded mode cannot shrink further (no surviving device to re-fold
+    onto, or an eviction target is unknown)."""
+
+
+# ---------------------------------------------------------------------------
+# Capacity bucketing + retry policy
+# ---------------------------------------------------------------------------
+
+def quantize_capacity(cap: int, ratio: float = 2.0) -> int:
+    """Round a capacity UP to the geometric grid {1, ⌈r⌉, ⌈⌈r⌉·r⌉, ...}.
+
+    Compiled steps are keyed on capacities, so every distinct derived cap is
+    a cold compile; quantizing to a coarse geometric grid makes
+    heterogeneous-but-similar chunks and geometrically escalated retries
+    land on ALREADY-COMPILED signatures (the warm step cache) instead of
+    recompiling.  ratio ≤ 1 disables (identity); ratio 2 is the power-of-two
+    grid.  Never rounds down — a bucketed cap can only add slack."""
+    cap = int(cap)
+    if ratio <= 1.0 or cap <= 1:
+        return max(cap, 1)
+    b = 1
+    while b < cap:
+        b = max(int(np.ceil(b * ratio)), b + 1)
+    return b
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded overflow-retry policy: escalate the overflowing capacities by
+    `escalation` (quantized to the session's bucket grid, so ladder rungs are
+    shared executables) and re-run the SAME chunk, at most `max_retries`
+    times; then raise `RetryBudgetExceededError`.  `escalation` should match
+    the config's `cap_bucket` ratio — then every retry moves exactly one grid
+    point and a previously-walked ladder recompiles nothing."""
+    max_retries: int = 4
+    escalation: float = 2.0
+
+
 @dataclass(frozen=True)
 class ExecutorConfig:
     capacity_factor: float = 2.0       # shuffle slack over the max observed load
@@ -83,6 +189,11 @@ class ExecutorConfig:
     hash_bits: int | None = None       # hash-table bits; None -> ~2·n_r
                                        # buckets (tiny values force collision
                                        # chains — resolution stays exact)
+    cap_bucket: float = 2.0            # geometric grid DERIVED capacities are
+                                       # quantized to (≤ 1 disables); aligns
+                                       # retries + similar chunks on warm
+                                       # executables (explicit caps= are
+                                       # respected verbatim)
 
 
 @dataclass(frozen=True)
@@ -196,6 +307,43 @@ def _count_matrix(dest: jnp.ndarray, n: int, k: int, n_src: int
     `_count_pass`'s oracle branch, the map_scaling benchmark, and the tests
     (the one scatter `kernels.map_pack.count_scatter` defines)."""
     return count_scatter(dest, n, k, n_src)
+
+
+def _validate_relation(name: str, arr: np.ndarray, width: int | None = None
+                       ) -> np.ndarray:
+    """Host-side input validation before anything is uploaded.
+
+    The data-plane contract (module docstring): integer 2-D arrays, attribute
+    values ≥ 0, with -1 reserved for the executor's own padding sentinel.
+    Corrupted rows (negative garbage, values outside int32) would alias the
+    sentinel or wrap in the int32 cast — silently wrong joins — so they are
+    rejected HERE with the relation name and offending row, never routed."""
+    a = np.asarray(arr)
+    if a.ndim != 2:
+        raise InputValidationError(
+            f"relation {name!r}: expected a 2-D (rows, attrs) array, got "
+            f"shape {a.shape}")
+    if width is not None and a.shape[1] != width:
+        raise InputValidationError(
+            f"relation {name!r}: {a.shape[1]} columns != {width} declared "
+            f"attributes")
+    if not np.issubdtype(a.dtype, np.integer):
+        raise InputValidationError(
+            f"relation {name!r}: dtype {a.dtype} is not integer (attribute "
+            f"values are int32 ≥ 0)")
+    if a.size:
+        lo, hi = int(a.min()), int(a.max())
+        if lo < INVALID:
+            bad = np.nonzero((a < INVALID).any(axis=1))[0]
+            raise InputValidationError(
+                f"relation {name!r}: {bad.size} corrupted rows with values "
+                f"< {INVALID} (first at row {int(bad[0])}); -1 is the "
+                f"reserved padding sentinel and attribute values must be "
+                f"≥ 0")
+        if hi > np.iinfo(np.int32).max:
+            raise InputValidationError(
+                f"relation {name!r}: max value {hi} exceeds int32 range")
+    return a
 
 
 def _check_placement_compat(placement: CellPlacement, k: int, n_dev: int
@@ -553,14 +701,20 @@ class ShardedJoinExecutor:
             self._count_fn = jax.jit(count_matrices)
         return self._count_fn
 
-    def _compiled_step(self, shapes: tuple, caps: Mapping[str, int]):
-        """Compiled map→shuffle→reduce step for one (shapes, caps) signature.
+    def _compiled_step(self, shapes: tuple, caps: Mapping[str, int],
+                       cap_out: int | None = None):
+        """Compiled map→shuffle→reduce step for one (shapes, caps, cap_out)
+        signature.
 
         The placement table is the step's FIRST argument (replicated, traced)
-        — sessions with different placements share the same executable."""
+        — sessions with different placements share the same executable.
+        `cap_out` (the join output capacity, default the config's) is part of
+        the cache key so retry escalation of the reduce phase gets its own
+        executable without rebuilding the executor."""
         query, cfg = self.plan.query, self.config
         n_dev = self.n_devices
-        key = (shapes, tuple(caps[r.name] for r in query.relations))
+        cap_out = cfg.out_capacity if cap_out is None else int(cap_out)
+        key = (shapes, tuple(caps[r.name] for r in query.relations), cap_out)
         f = self._step_cache.pop(key, None)
         if f is not None:
             self._step_cache[key] = f     # re-insert: LRU, not FIFO, eviction
@@ -571,7 +725,7 @@ class ShardedJoinExecutor:
 
         def step(ptable, *arrs):
             local = {r.name: a for r, a in zip(query.relations, arrs)}
-            frags, sh_over = {}, jnp.int32(0)
+            frags, overs = {}, []
             recv_count = jnp.int32(0)
             for rel in query.relations:
                 if cfg.use_kernels and cfg.fuse_map:
@@ -587,13 +741,16 @@ class ShardedJoinExecutor:
                     phys = _fold_dests(dest, ptable, cfg.use_kernels)
                     buf, over = _pack_buckets(phys, rows, n_dev,
                                               caps[rel.name], cfg.use_kernels)
-                sh_over = sh_over + over
+                overs.append(over)
                 recv = jax.lax.all_to_all(buf, self.axis, split_axis=0,
                                           concat_axis=0, tiled=True)
                 frag = recv.reshape(-1, recv.shape[-1])
                 recv_count = recv_count + (frag[:, -1] != INVALID).sum()
                 frags[rel.name] = frag
-            out, valid, j_over = _local_join(frags, query, cfg.out_capacity,
+            # Per-relation overflow vector: the per-(device, phase, relation)
+            # coordinates CapacityOverflowError and targeted retry need.
+            sh_over = jnp.stack(overs)
+            out, valid, j_over = _local_join(frags, query, cap_out,
                                              cfg.use_kernels, cfg.hash_reduce,
                                              cfg.hash_bits)
             return (out[None], valid[None], sh_over[None], j_over[None],
@@ -625,10 +782,8 @@ class ShardedJoinExecutor:
     def result_rows(self, data: Mapping[str, np.ndarray]) -> np.ndarray:
         res = self.run(data)
         if res["shuffle_overflow"].sum() or res["join_overflow"].sum():
-            raise RuntimeError(
-                f"capacity overflow: shuffle={res['shuffle_overflow'].sum()} "
-                f"join={res['join_overflow'].sum()}; raise capacity_factor/"
-                f"out_capacity")
+            raise CapacityOverflowError.from_result(
+                res, tuple(r.name for r in self.plan.query.relations))
         return res["rows"][res["valid"]]
 
 
@@ -664,22 +819,44 @@ class ExecutorSession:
     def __init__(self, executor: ShardedJoinExecutor):
         self.executor = executor
         self.caps: dict[str, int] = {}
+        self.cap_out: int = int(executor.config.out_capacity)
         self.placement: CellPlacement | None = None
         self.count_passes = 0           # routing passes run by prepare()
         self._device_args: list[jnp.ndarray] | None = None
         self._ptable_dev: jnp.ndarray | None = None
         self._shapes: tuple | None = None
+        self._count_mats: list[np.ndarray] | None = None
+        n_rel = len(executor.plan.query.relations)
+        # Cumulative fault counters over the SESSION lifetime: every attempt
+        # of every chunk is counted exactly once, so retried chunks keep the
+        # overflow their failed attempts saw (the delivered result's own
+        # counters are zero after a successful retry).
+        self.stats: dict = {
+            "batches": 0,               # run_batch calls (attempts included)
+            "retries": 0,               # re-runs forced by overflow
+            "escalations": 0,           # capacity bumps applied by retries
+            "shuffle_overflow": np.zeros((executor.n_devices, n_rel),
+                                         np.int64),
+            "join_overflow": np.zeros(executor.n_devices, np.int64),
+        }
 
     def prepare(self, data: Mapping[str, np.ndarray],
                 caps: Mapping[str, int] | None = None,
                 placement: CellPlacement | None = None) -> "ExecutorSession":
-        """Shard + upload `data`; derive (or accept) placement + capacities."""
+        """Shard + upload `data`; derive (or accept) placement + capacities.
+
+        Derived capacities are quantized to the config's `cap_bucket`
+        geometric grid (see `quantize_capacity`) so similar chunk mixes and
+        escalated retries share compiled steps; explicit `caps=` are
+        respected verbatim (they are the tests' and the chaos harness's
+        forced-tiny-caps hook)."""
         ex = self.executor
         plan, n_dev = ex.plan, ex.n_devices
         if placement is None:
             placement = ex.placement
         if placement is not None:
             _check_placement_compat(placement, plan.k, n_dev)
+        self.cap_out = int(ex.config.out_capacity)
         if not plan.residuals:
             # Provably empty join (some relation contributes zero tuples).
             # Still expose a (trivial) placement so callers reading
@@ -687,10 +864,12 @@ class ExecutorSession:
             self.placement = placement or modulo_placement(plan.k, n_dev)
             self._device_args, self._shapes = [], ()
             return self
-        sharded = [ex._shard(np.asarray(data[r.name]))
+        sharded = [ex._shard(_validate_relation(r.name, data[r.name],
+                                                len(r.attrs)))
                    for r in plan.query.relations]
         self._device_args = [ex._upload(s) for s in sharded]
         self._shapes = tuple(s.shape for s in sharded)
+        self._count_mats = None
         counts = None
         if placement is None:
             if plan.k == n_dev:
@@ -704,14 +883,9 @@ class ExecutorSession:
         self._ptable_dev = ex._upload_table(placement)
         if caps is None:
             counts = counts if counts is not None else self._counts()
-            factor = ex.config.capacity_factor
-            # Fold logical columns onto devices: worst (source, dest) count.
-            fold = np.zeros((plan.k, n_dev), np.int64)
-            fold[np.arange(plan.k), placement.table] = 1
-            caps = {r.name: int(np.ceil(max(int((c @ fold).max()), 1)
-                                        * factor))
-                    for r, c in zip(plan.query.relations, counts)}
+            caps = self._derive_caps(counts, placement)
         self.caps = dict(caps)
+        self._count_mats = counts       # None when caps+placement were given
         return self
 
     def _counts(self) -> list[np.ndarray]:
@@ -719,6 +893,58 @@ class ExecutorSession:
         self.count_passes += 1
         return [np.asarray(c, np.int64)
                 for c in self.executor._count_pass()(*self._device_args)]
+
+    def _derive_caps(self, counts: list[np.ndarray],
+                     placement: CellPlacement) -> dict[str, int]:
+        """Bucketed shuffle capacities: worst per-(source, destination
+        device) routed-copy count after folding the count matrices through
+        `placement`, times `capacity_factor`, quantized to the cap grid."""
+        ex = self.executor
+        plan, n_dev = ex.plan, ex.n_devices
+        factor = ex.config.capacity_factor
+        # Fold logical columns onto devices: worst (source, dest) count.
+        fold = np.zeros((plan.k, n_dev), np.int64)
+        fold[np.arange(plan.k), placement.table] = 1
+        return {r.name: quantize_capacity(
+                    int(np.ceil(max(int((c @ fold).max()), 1) * factor)),
+                    ex.config.cap_bucket)
+                for r, c in zip(plan.query.relations, counts)}
+
+    def cell_loads(self) -> np.ndarray:
+        """Per-logical-cell routed-copy loads (k,) from the prepare-time
+        count matrices — the LPT input for degraded-mode re-folds.  Runs one
+        count pass if prepare() was handed everything and never counted."""
+        if self._shapes is None:
+            raise RuntimeError("ExecutorSession.cell_loads before prepare()")
+        if self._count_mats is None:
+            self._count_mats = self._counts()
+        return np.sum([c.sum(axis=0) for c in self._count_mats], axis=0)
+
+    def refold(self, placement: CellPlacement) -> "ExecutorSession":
+        """Re-place logical cells WITHOUT touching shapes or resident data.
+
+        Uploads the new table (a traced step argument — re-placing never
+        recompiles) and re-derives bucketed capacities from the prepare-time
+        count matrices folded through it; when the re-derived caps land in
+        the already-compiled bucket (the common case — `capacity_factor`
+        headroom absorbs a single device loss), the next run_batch is warm.
+        This is the degraded-mode core: evicting a failed or persistently
+        straggling device is `refold(lpt_placement(session.cell_loads(),
+        n_devices, devices=survivors))` — the dead device keeps its mesh
+        slot (SPMD collectives need it) but receives zero cells, and outputs
+        stay bit-exact because correctness never depends on placement."""
+        ex = self.executor
+        if self._shapes is None:
+            raise RuntimeError("ExecutorSession.refold before prepare()")
+        _check_placement_compat(placement, ex.plan.k, ex.n_devices)
+        self.placement = placement
+        if not ex.plan.residuals:
+            return self
+        self._ptable_dev = ex._upload_table(placement)
+        if self._count_mats is None:
+            self._count_mats = self._counts()
+        self.caps = self._derive_caps(self._count_mats, placement)
+        return self
 
     def run_batch(self, chunks: Mapping[str, np.ndarray] | None = None
                   ) -> dict[str, np.ndarray]:
@@ -731,12 +957,15 @@ class ExecutorSession:
             raise RuntimeError("ExecutorSession.run_batch before prepare()")
         ex = self.executor
         plan, query = ex.plan, ex.plan.query
-        n_dev = ex.n_devices
+        n_dev, n_rel = ex.n_devices, len(query.relations)
         if not plan.residuals:
             w = len(query.attributes)
+            self.stats["batches"] += 1
             return {"rows": np.zeros((0, w), np.int32),
                     "valid": np.zeros((0,), bool),
                     "shuffle_overflow": np.zeros(n_dev, np.int64),
+                    "shuffle_overflow_by_rel": np.zeros((n_dev, n_rel),
+                                                        np.int64),
                     "join_overflow": np.zeros(n_dev, np.int64),
                     "recv_counts": np.zeros(n_dev, np.int64)}
         if chunks is None:
@@ -744,7 +973,8 @@ class ExecutorSession:
         else:
             args = []
             for rel, target in zip(query.relations, self._shapes):
-                sh = ex._shard(np.asarray(chunks[rel.name]))
+                sh = ex._shard(_validate_relation(rel.name, chunks[rel.name],
+                                                  len(rel.attrs)))
                 if sh.shape[0] < target[0]:
                     pad = np.full((target[0] - sh.shape[0], sh.shape[1]),
                                   INVALID, sh.dtype)
@@ -763,12 +993,65 @@ class ExecutorSession:
                 f"capacities (compiles a new step for a new shape); "
                 f"re-prepare() to re-derive shapes/placement/capacities",
                 UserWarning, stacklevel=2)
-        f = ex._compiled_step(shapes, self.caps)
+        f = ex._compiled_step(shapes, self.caps, self.cap_out)
         out, valid, sh_over, j_over, recv = f(self._ptable_dev, *args)
+        sh_by_rel = np.asarray(sh_over, np.int64)       # (n_dev, n_rel)
+        j_arr = np.asarray(j_over, np.int64)
+        self.stats["batches"] += 1
+        self.stats["shuffle_overflow"] += sh_by_rel
+        self.stats["join_overflow"] += j_arr
         return {
             "rows": np.asarray(out).reshape(-1, out.shape[-1]),
             "valid": np.asarray(valid).reshape(-1),
-            "shuffle_overflow": np.asarray(sh_over),
-            "join_overflow": np.asarray(j_over),
+            "shuffle_overflow": sh_by_rel.sum(axis=1),
+            "shuffle_overflow_by_rel": sh_by_rel,
+            "join_overflow": j_arr,
             "recv_counts": np.asarray(recv),
         }
+
+    def run_with_retry(self, chunks: Mapping[str, np.ndarray] | None = None,
+                       policy: RetryPolicy | None = None
+                       ) -> dict[str, np.ndarray]:
+        """Execute one batch, healing capacity overflow by bounded retry.
+
+        Each overflowing attempt escalates EXACTLY the failing capacities —
+        the shuffle cap of each relation that dropped copies, the join
+        output cap when the reduce cascade dropped results — by the policy's
+        `escalation` factor, quantized to the config's `cap_bucket` grid,
+        and re-runs the SAME chunk.  Grid alignment is what keeps retries
+        cheap: an escalation ladder any previous chunk (or session of this
+        executor) has walked hits the warm step cache and compiles nothing.
+        After `policy.max_retries` escalations a still-overflowing result
+        raises `RetryBudgetExceededError` with the full per-device,
+        per-phase breakdown; the delivered result of a successful retry has
+        zero overflow (every failed attempt's counters stay visible in
+        `session.stats`)."""
+        policy = policy or RetryPolicy()
+        ex = self.executor
+        rels = tuple(r.name for r in ex.plan.query.relations)
+        res = self.run_batch(chunks)
+        attempt = 1
+        while res["shuffle_overflow"].sum() or res["join_overflow"].sum():
+            if attempt > policy.max_retries:
+                base = CapacityOverflowError.from_result(res, rels)
+                raise RetryBudgetExceededError(
+                    f"retry budget exhausted: {attempt} attempts "
+                    f"({policy.max_retries} retries) and the last still "
+                    f"overflowed — {base}", base.shuffle_by_rel,
+                    base.join_overflow, rels, attempt)
+            per_rel = res["shuffle_overflow_by_rel"].sum(axis=0)
+            for i, rel in enumerate(rels):
+                if per_rel[i]:
+                    self.caps[rel] = quantize_capacity(
+                        int(np.ceil(self.caps[rel] * policy.escalation)),
+                        ex.config.cap_bucket)
+                    self.stats["escalations"] += 1
+            if res["join_overflow"].sum():
+                self.cap_out = quantize_capacity(
+                    int(np.ceil(self.cap_out * policy.escalation)),
+                    ex.config.cap_bucket)
+                self.stats["escalations"] += 1
+            self.stats["retries"] += 1
+            res = self.run_batch(chunks)
+            attempt += 1
+        return res

@@ -103,7 +103,8 @@ def modulo_placement(k: int, n_devices: int) -> CellPlacement:
                          n_devices, "modulo")
 
 
-def lpt_placement(cell_loads: np.ndarray, n_devices: int) -> CellPlacement:
+def lpt_placement(cell_loads: np.ndarray, n_devices: int,
+                  devices: list[int] | None = None) -> CellPlacement:
     """Greedy LPT bin packing of cells onto devices by estimated load.
 
     Cells are placed in decreasing load order (ties broken by cell id, so the
@@ -111,14 +112,33 @@ def lpt_placement(cell_loads: np.ndarray, n_devices: int) -> CellPlacement:
     load; equal loads break toward the device holding fewer cells, then the
     lower device id — so zero-load cells spread round-robin instead of piling
     onto device 0, and the table is fully deterministic.
+
+    `devices` restricts the pack to a subset of the mesh — the degraded-mode
+    re-fold after a device failure/eviction (ft/): the table still indexes
+    the FULL [0, n_devices) id space (the mesh does not shrink), but only the
+    surviving devices receive cells, so an evicted device gets zero data
+    while still participating in the collective.
     """
     loads = np.asarray(cell_loads, np.float64)
     if loads.ndim != 1:
         raise ValueError("cell_loads must be 1-D (one entry per logical cell)")
     k = loads.size
     check_fold(k, n_devices)
+    if devices is None:
+        devices = list(range(n_devices))
+    else:
+        devices = sorted(set(int(d) for d in devices))
+        if not devices:
+            raise ValueError("lpt_placement needs at least one target device")
+        if devices[0] < 0 or devices[-1] >= n_devices:
+            raise ValueError(
+                f"target devices {devices} outside [0, {n_devices})")
+        if k < len(devices):
+            raise ValueError(
+                f"k={k} logical cells < {len(devices)} target devices")
     order = np.argsort(-loads, kind="stable")       # decreasing, id tie-break
-    heap = [(0.0, 0, d) for d in range(n_devices)]  # (load, n_cells, device)
+    heap = [(0.0, 0, d) for d in devices]           # (load, n_cells, device)
+    heapq.heapify(heap)
     table = np.zeros(k, np.int32)
     for c in order:
         load, n_cells, d = heapq.heappop(heap)
@@ -128,12 +148,15 @@ def lpt_placement(cell_loads: np.ndarray, n_devices: int) -> CellPlacement:
 
 
 def place_cells(cell_loads: np.ndarray | None, k: int, n_devices: int,
-                strategy: str = "lpt") -> CellPlacement:
+                strategy: str = "lpt",
+                devices: list[int] | None = None) -> CellPlacement:
     """Build a placement for k cells; `cell_loads` may be None (-> modulo).
 
     The planner-facing entry point: pass `SkewJoinPlan.cell_loads(data)` (or
     the executor session's on-device routing histogram) for skew-aware LPT,
-    or nothing for the oblivious modulo wrap.
+    or nothing for the oblivious modulo wrap.  `devices` restricts LPT to a
+    survivor subset of the mesh (degraded mode — see `lpt_placement`);
+    modulo ignores it (the oblivious wrap has no notion of failed devices).
     """
     if strategy == "modulo" or cell_loads is None:
         return modulo_placement(k, n_devices)
@@ -142,7 +165,7 @@ def place_cells(cell_loads: np.ndarray | None, k: int, n_devices: int,
     loads = np.asarray(cell_loads, np.float64)
     if loads.size != k:
         raise ValueError(f"cell_loads has {loads.size} entries, expected k={k}")
-    return lpt_placement(loads, n_devices)
+    return lpt_placement(loads, n_devices, devices)
 
 
 def check_fold(k: int, n_devices: int) -> None:

@@ -1,7 +1,8 @@
-"""repro.ft — fault tolerance: health, stragglers, elastic re-meshing."""
+"""repro.ft — fault tolerance: health, stragglers, chaos, elastic re-meshing."""
 from .health import HealthMonitor, NodeState
 from .straggler import StragglerWatchdog
 from .elastic import elastic_remesh, survivors_mesh
+from .chaos import ChaosInjector
 
 __all__ = ["HealthMonitor", "NodeState", "StragglerWatchdog",
-           "elastic_remesh", "survivors_mesh"]
+           "elastic_remesh", "survivors_mesh", "ChaosInjector"]

@@ -41,6 +41,10 @@ class HealthMonitor:
         self._forced_failures.add(node)
 
     def state(self, node: int) -> NodeState:
+        if node not in self._last_beat:
+            raise ValueError(
+                f"unknown node {node}: this monitor tracks nodes "
+                f"0..{self.n_nodes - 1} (n_nodes={self.n_nodes})")
         age = self.clock() - self._last_beat[node]
         if age > self.heartbeat_timeout_s:
             return NodeState.FAILED

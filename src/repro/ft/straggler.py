@@ -30,16 +30,25 @@ class StragglerWatchdog:
         self._t = np.zeros(self.n_nodes)
         self._strikes = np.zeros(self.n_nodes, dtype=int)
 
+    def _median(self) -> float:
+        """Fleet median over nodes WITH a recorded time; 0.0 when none have
+        one (all-zero reports) — np.median of the empty slice is nan plus a
+        RuntimeWarning, and nan comparisons would silently disable strikes."""
+        recorded = self._t[self._t > 0]
+        return float(np.median(recorded)) if recorded.size else 0.0
+
     def record_step(self, times_s: np.ndarray) -> None:
         times_s = np.asarray(times_s, dtype=float)
         self._t = np.where(self._t == 0, times_s,
                            self.ema * self._t + (1 - self.ema) * times_s)
-        med = np.median(self._t[self._t > 0])
+        med = self._median()
+        if med == 0.0:
+            return                      # no node has a time yet: no stragglers
         slow = self._t > self.threshold * med
         self._strikes = np.where(slow, self._strikes + 1, 0)
 
     def stragglers(self) -> list[int]:
-        med = np.median(self._t[self._t > 0]) if (self._t > 0).any() else 0
+        med = self._median()
         return [i for i in range(self.n_nodes)
                 if med and self._t[i] > self.threshold * med]
 

@@ -1,6 +1,6 @@
-"""repro.serve — batched serving substrate."""
+"""repro.serve — batched serving substrate + self-healing join sessions."""
 from .serve_step import ServeFns, build_decode_step, build_prefill
-from .engine import Request, ServingEngine
+from .engine import Request, SelfHealingSession, ServingEngine
 
 __all__ = ["ServeFns", "build_decode_step", "build_prefill",
-           "Request", "ServingEngine"]
+           "Request", "ServingEngine", "SelfHealingSession"]

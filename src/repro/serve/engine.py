@@ -1,26 +1,38 @@
-"""Continuous-batching serving engine.
+"""Serving engines: continuous-batching decode + the self-healing join loop.
 
-A fixed pool of B sequence slots runs one fused decode step per tick; requests
-are admitted into free slots as others finish (continuous batching — the
-serving pattern the decode_32k cell's step function is built for).  Prompt
-ingestion replays prompt tokens through the same decode step, so one compiled
-executable serves both phases (no second program; prefill_32k exists for the
-bulk-prompt path).
+Two long-lived run loops live here:
 
-Greedy sampling; per-request max_new_tokens; deterministic given (params,
-prompts).  Slot bookkeeping is host-side numpy; the device state is just
-(cache, tokens, pos) — checkpointable like everything else.
+`ServingEngine` — a fixed pool of B sequence slots runs one fused decode step
+per tick; requests are admitted into free slots as others finish (continuous
+batching — the serving pattern the decode_32k cell's step function is built
+for).  Prompt ingestion replays prompt tokens through the same decode step,
+so one compiled executable serves both phases (no second program;
+prefill_32k exists for the bulk-prompt path).  Greedy sampling; per-request
+max_new_tokens; deterministic given (params, prompts).  Slot bookkeeping is
+host-side numpy; the device state is just (cache, tokens, pos) —
+checkpointable like everything else.
+
+`SelfHealingSession` — the fault-tolerant control loop around a join
+`ExecutorSession`: capacity overflow heals by bounded bucket-aligned retry,
+device loss (missed heartbeats) and persistent stragglers heal by evicting
+the device and re-folding the logical cells over the survivors.  See the
+class docstring; tests/test_chaos.py drives every fault path.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Callable, Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
+from ..core.executor import (DeviceLossError, ExecutorSession, RetryPolicy,
+                             ShardedJoinExecutor)
+from ..core.placement import lpt_placement
+from ..ft import ChaosInjector, HealthMonitor, StragglerWatchdog
 from ..models import api
 from .serve_step import ServeFns, build_decode_step
 
@@ -115,3 +127,145 @@ class ServingEngine:
                 req.done = True
                 self.slots[i] = None                  # slot freed; cache rows
                 # are overwritten by the next admit (pos resets to 0).
+
+
+class SelfHealingSession:
+    """Fault-tolerant run loop around a join `ExecutorSession`.
+
+    Wires the ft/ package into the executor data plane, one response per
+    fault class:
+
+      overflow    -> `ExecutorSession.run_with_retry`: bounded retry with
+                     bucket-aligned capacity escalation (only the failing
+                     relation/phase caps grow; a ladder the executor has
+                     already walked compiles nothing);
+      device loss -> `HealthMonitor` heartbeats per completed batch; a
+                     device that stops heartbeating past the timeout is
+                     evicted — LPT re-runs over the survivors and the
+                     logical cells re-fold (`ExecutorSession.refold`).  The
+                     placement table is a traced step argument, so the
+                     re-fold itself never recompiles; the evicted device
+                     keeps its mesh slot (SPMD collectives need it) but
+                     receives zero cells, and outputs stay bit-exact
+                     because correctness never depends on placement;
+      stragglers  -> per-device step timings feed `StragglerWatchdog`;
+                     `evict_after` consecutive strikes evicts the device
+                     through the same re-fold path.
+
+    On one host the SPMD step yields no true per-device timings, so
+    `timing_fn(wall_s) -> (n_devices,) seconds` defaults to uniform wall
+    time, and a `ChaosInjector` (ft/chaos.py) supplies the faults
+    deterministically: per-device delays, dropped heartbeats, squeezed
+    capacities, corrupted rows — plus the virtual clock the HealthMonitor
+    runs on, advanced `step_seconds` per batch.  On a real multi-host mesh
+    the same loop runs with wall clocks and per-host timings.
+    """
+
+    def __init__(self, executor: ShardedJoinExecutor,
+                 retry: RetryPolicy | None = None,
+                 chaos: ChaosInjector | None = None,
+                 heartbeat_timeout_s: float = 30.0,
+                 suspect_timeout_s: float = 10.0,
+                 straggler_threshold: float = 1.5,
+                 evict_after: int = 5,
+                 step_seconds: float = 1.0,
+                 timing_fn: Callable[[float], np.ndarray] | None = None):
+        self.executor = executor
+        self.session: ExecutorSession = executor.session()
+        self.retry = retry or RetryPolicy()
+        self.chaos = chaos
+        n = executor.n_devices
+        clock = chaos.clock if chaos is not None else time.monotonic
+        self.health = HealthMonitor(n, heartbeat_timeout_s,
+                                    suspect_timeout_s, clock=clock)
+        self.watchdog = StragglerWatchdog(n, threshold=straggler_threshold,
+                                          evict_after=evict_after)
+        self.alive: list[int] = list(range(n))
+        self.evicted: list[int] = []
+        self.refolds = 0
+        self.refold_compiles = 0        # refolds whose caps left the bucket
+        self.step_seconds = float(step_seconds)
+        self.timing_fn = timing_fn
+
+    def prepare(self, data: Mapping[str, np.ndarray], **kw
+                ) -> "SelfHealingSession":
+        """Prepare the wrapped session (chaos cap squeezes apply here)."""
+        self.session.prepare(data, **kw)
+        if self.chaos is not None and self.session.caps:
+            self.session.caps = self.chaos.squeeze(self.session.caps)
+        return self
+
+    @property
+    def stats(self) -> dict:
+        """Session fault counters plus the healing loop's own."""
+        return {**self.session.stats,
+                "evicted": list(self.evicted),
+                "refolds": self.refolds,
+                "refold_compiles": self.refold_compiles}
+
+    def run_batch(self, chunks: Mapping[str, np.ndarray] | None = None
+                  ) -> dict[str, np.ndarray]:
+        """One healed batch: evict the dead, run (retrying overflow), feed
+        the monitors, evict fresh stragglers.  Returns the (overflow-free,
+        unless the retry budget raised) executor result."""
+        ses, ex = self.session, self.executor
+        if self.chaos is not None:
+            chunks = self.chaos.mangle(chunks)
+        # Failures detected since the last batch (heartbeats aged out).
+        self._evict([d for d in self.health.failed_nodes()
+                     if d in self.alive])
+        t0 = time.perf_counter()
+        try:
+            res = ses.run_with_retry(chunks, self.retry)
+        finally:
+            # Virtual time passes even for a failed batch — a scheduled fault
+            # fires once at its step, it doesn't re-fire forever.
+            if self.chaos is not None:
+                self.chaos.advance(self.step_seconds)
+        wall = max(time.perf_counter() - t0, 1e-9)
+        times = (self.timing_fn(wall) if self.timing_fn is not None
+                 else np.full(ex.n_devices, wall))
+        if self.chaos is not None:
+            times = self.chaos.step_times(times)
+        self.watchdog.record_step(times)
+        beating = set(self.alive)
+        if self.chaos is not None:
+            beating -= self.chaos.dropped_heartbeats()
+        for d in beating:
+            self.health.heartbeat(d)
+        self._evict([d for d in self.watchdog.to_evict()
+                     if d in self.alive])
+        return res
+
+    def evict_device(self, device: int) -> None:
+        """Manually evict one device (operator drain / external detector)."""
+        if device not in self.alive:
+            raise DeviceLossError(
+                f"device {device} is not alive (alive={self.alive}, "
+                f"evicted={self.evicted})")
+        self._evict([device])
+
+    def _evict(self, devices: list[int]) -> None:
+        devices = [d for d in devices if d in self.alive]
+        if not devices:
+            return
+        survivors = [d for d in self.alive if d not in devices]
+        if not survivors:
+            raise DeviceLossError(
+                f"cannot evict {sorted(devices)}: no surviving devices left "
+                f"to re-fold {self.executor.plan.k} cells onto")
+        ses, ex = self.session, self.executor
+        placement = lpt_placement(ses.cell_loads(), ex.n_devices,
+                                  devices=survivors)
+        ses.refold(placement)
+        # The re-fold itself never compiles (traced table); only caps leaving
+        # their bucket would, on the NEXT batch — count that here so benches
+        # and CI can gate "device loss recompiles nothing" honestly.
+        key = (ses._shapes,
+               tuple(ses.caps[r.name] for r in ex.plan.query.relations),
+               ses.cap_out)
+        if key not in ex._step_cache:
+            self.refold_compiles += 1
+        self.alive = survivors
+        self.evicted.extend(sorted(devices))
+        self.refolds += 1

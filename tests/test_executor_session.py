@@ -4,7 +4,8 @@ import pytest
 import jax
 
 from repro.core import canonical, plan_skew_join, reference_join, two_way
-from repro.core.executor import ExecutorConfig, ShardedJoinExecutor
+from repro.core.executor import (ExecutorConfig, ShardedJoinExecutor,
+                                 quantize_capacity)
 from repro.data import skewed_join_dataset
 
 pytestmark = pytest.mark.skipif(
@@ -32,7 +33,8 @@ def test_session_matches_reference_join():
 
 
 def test_session_capacity_matches_plan_hook():
-    """The jitted on-device capacity pass == the numpy shuffle_capacity hook."""
+    """The jitted on-device capacity pass == the numpy shuffle_capacity hook
+    (rounded up to the config's capacity bucket grid)."""
     q = two_way()
     data = skewed_join_dataset(q, 600, 50, skew={"B": 1.5}, seed=22)
     plan, ex = _executor(data, q)
@@ -40,8 +42,10 @@ def test_session_capacity_matches_plan_hook():
     for rel in q.relations:
         sharded = ex._shard(np.asarray(data[rel.name]))
         worst = plan.shuffle_capacity(rel.name, sharded, plan.k)
-        expect = int(np.ceil(worst * ex.config.capacity_factor))
+        raw = int(np.ceil(worst * ex.config.capacity_factor))
+        expect = quantize_capacity(raw, ex.config.cap_bucket)
         assert s.caps[rel.name] == expect, rel.name
+        assert expect >= raw                      # bucketing only adds room
 
 
 def test_session_run_batch_streams_chunks():
@@ -145,3 +149,102 @@ def test_run_batch_before_prepare_raises():
     _, ex = _executor(data, q)
     with pytest.raises(RuntimeError, match="before prepare"):
         ex.session().run_batch()
+
+
+def test_capacity_bucketing_shares_executables():
+    """Two same-shaped datasets whose raw derived caps differ but land in the
+    same capacity bucket share ONE compiled step (the warm-cache win that
+    bucketing buys; ratio 2.0 = power-of-two grid)."""
+    from repro.core.executor import quantize_capacity
+
+    q = two_way()
+    d1 = skewed_join_dataset(q, 500, 40, skew={"B": 1.5}, seed=25)
+    d2 = skewed_join_dataset(q, 500, 40, skew={"B": 1.6}, seed=26)
+    _, ex = _executor(d1, q)
+    s1 = ex.session().prepare(d1)
+    s1.run_batch()
+    s2 = ex.session().prepare(d2)
+    if s1.caps == s2.caps:                      # same buckets (the usual case)
+        s2.run_batch()
+        assert ex.compile_count == 1
+    # The grid itself: idempotent on grid points, strictly rounds up between.
+    for c in (1, 2, 4, 1024):
+        assert quantize_capacity(c, 2.0) == c
+    assert quantize_capacity(3, 2.0) == 4
+    assert quantize_capacity(1000, 2.0) == 1024
+    assert quantize_capacity(7, 1.0) == 7       # ratio <= 1 disables the grid
+
+
+def test_run_with_retry_escalates_only_failing_caps():
+    """Tiny explicit caps on one relation: run_with_retry recovers exactly,
+    escalates only that relation's cap on the bucket grid, and the session
+    stats keep every failed attempt's overflow visible."""
+    from repro.core import canonical, reference_join
+    from repro.core.executor import RetryPolicy
+
+    q = two_way()
+    data = skewed_join_dataset(q, 500, 40, skew={"B": 1.7}, seed=27)
+    _, ex = _executor(data, q)
+    probe = ex.session().prepare(data)          # derived (sufficient) caps
+    caps = dict(probe.caps)
+    caps["R"] = 2                               # force R's shuffle to overflow
+    s = ex.session().prepare(data, caps=caps, placement=probe.placement)
+    res = s.run_with_retry()
+    got = res["rows"][res["valid"]]
+    np.testing.assert_array_equal(canonical(got), reference_join(q, data))
+    assert s.stats["retries"] >= 1
+    assert s.stats["retries"] <= RetryPolicy().max_retries
+    assert s.caps["R"] > 2                      # escalated...
+    assert s.caps["S"] == caps["S"]             # ...but only the failing cap
+    assert s.stats["shuffle_overflow"][:, 0].sum() > 0      # R overflowed
+    assert s.stats["shuffle_overflow"][:, 1].sum() == 0     # S never did
+    assert res["shuffle_overflow"].sum() == 0   # delivered result is clean
+
+
+def test_overflow_error_carries_per_device_breakdown():
+    """result_rows on an overflowed result raises CapacityOverflowError with
+    per-device, per-phase, per-relation counters (machine-readable + in the
+    message)."""
+    from repro.core.executor import CapacityOverflowError
+
+    q = two_way()
+    data = skewed_join_dataset(q, 500, 40, skew={"B": 1.7}, seed=28)
+    _, ex = _executor(data, q)
+    probe = ex.session().prepare(data)
+    caps = dict(probe.caps, R=2)
+    s = ex.session().prepare(data, caps=caps, placement=probe.placement)
+    res = s.run_batch()
+    assert res["shuffle_overflow"].sum() > 0
+    with pytest.raises(CapacityOverflowError, match=r"(?s)shuffle\[R\]") as ei:
+        raise CapacityOverflowError.from_result(res, ("R", "S"))
+    err = ei.value
+    assert err.shuffle_by_rel.shape == (8, 2)
+    np.testing.assert_array_equal(err.shuffle_by_rel,
+                                  res["shuffle_overflow_by_rel"])
+    assert err.shuffle_by_rel[:, 0].sum() > 0   # attributed to R, not S
+    assert err.shuffle_by_rel[:, 1].sum() == 0
+
+
+def test_prepare_rejects_corrupted_inputs():
+    """Sub-sentinel values, wrong width, float dtype: all rejected with the
+    relation named, before anything is uploaded."""
+    from repro.core.executor import InputValidationError
+
+    q = two_way()
+    data = skewed_join_dataset(q, 200, 20, seed=29)
+    _, ex = _executor(data, q)
+    bad = {k: np.array(v, copy=True) for k, v in data.items()}
+    bad["R"][3, 0] = -7
+    with pytest.raises(InputValidationError,
+                       match=r"relation 'R'.*corrupted.*row 3"):
+        ex.session().prepare(bad)
+    wide = dict(data, S=np.hstack([data["S"], data["S"][:, :1]]))
+    with pytest.raises(InputValidationError, match=r"relation 'S'.*columns"):
+        ex.session().prepare(wide)
+    floaty = dict(data, R=data["R"].astype(np.float64))
+    with pytest.raises(InputValidationError, match=r"relation 'R'.*integer"):
+        ex.session().prepare(floaty)
+    # run_batch chunks go through the same gate.
+    s = ex.session().prepare(data)
+    with pytest.raises(InputValidationError, match=r"relation 'R'"):
+        s.run_batch(bad)

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from repro.core import (CellPlacement, canonical, lpt_placement,
                         modulo_placement, plan_skew_join, reference_join,
                         running_example, two_way)
-from repro.core.executor import ExecutorConfig, ShardedJoinExecutor
+from repro.core.executor import (ExecutorConfig, ShardedJoinExecutor,
+                                 quantize_capacity)
 from repro.data import skewed_join_dataset
 
 pytestmark = pytest.mark.skipif(
@@ -126,7 +127,9 @@ def test_session_caps_match_plan_hook_with_placement():
     for rel in q.relations:
         sharded = ex._shard(np.asarray(data[rel.name]))
         worst = plan.shuffle_capacity(rel.name, sharded, N_DEV, s.placement)
-        expect = int(np.ceil(worst * ex.config.capacity_factor))
+        expect = quantize_capacity(
+            int(np.ceil(worst * ex.config.capacity_factor)),
+            ex.config.cap_bucket)
         assert s.caps[rel.name] == expect, rel.name
 
 

@@ -161,3 +161,56 @@ def test_end_to_end_elastic_training(tmp_path):
     p2, o2, m1 = fns2.step(state["params"], state["opt"], batch)
     assert np.isfinite(float(m1["loss"]))
     assert int(o2["step"]) == 2          # optimizer state carried over
+
+
+def test_straggler_all_zero_step_has_no_stragglers():
+    """An all-zero step report (no node timed yet) must be a clean no-op:
+    no RuntimeWarning from np.median of an empty slice, no nan EMA, no
+    stragglers, no strikes."""
+    import warnings
+
+    w = StragglerWatchdog(n_nodes=4, evict_after=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # any warning -> test failure
+        w.record_step(np.zeros(4))
+        assert w.stragglers() == []
+        assert w.to_evict() == []
+        np.testing.assert_array_equal(w.shard_weights(), np.full(4, 0.25))
+        # And the watchdog still works once real times arrive.
+        w.record_step(np.array([1.0, 1.0, 1.0, 10.0]))
+    assert w.stragglers() == [3]
+
+
+def test_health_monitor_unknown_node_is_a_clear_error():
+    hm = HealthMonitor(n_nodes=4, clock=lambda: 0.0)
+    with pytest.raises(ValueError, match=r"unknown node 9.*n_nodes=4"):
+        hm.state(9)
+    with pytest.raises(ValueError, match="unknown node -1"):
+        hm.state(-1)
+
+
+def test_chaos_injector_determinism():
+    """Same seed + schedule -> identical corruption; clock is fully virtual."""
+    from repro.ft import ChaosInjector
+
+    data = {"R": np.arange(20, dtype=np.int32).reshape(10, 2)}
+    outs = []
+    for _ in range(2):
+        ch = ChaosInjector(4, seed=7)
+        ch.corrupt_rows("R", n_rows=3, at_step=0)
+        outs.append(ch.mangle(data)["R"])
+    np.testing.assert_array_equal(outs[0], outs[1])
+    assert (outs[0] < -1).sum() == 3                # exactly 3 cells mangled
+    assert (data["R"] >= 0).all()                   # caller's array untouched
+    ch = ChaosInjector(4)
+    assert ch.clock() == 0.0
+    ch.advance(2.5)
+    ch.advance(2.5)
+    assert ch.clock() == 5.0 and ch.step == 2
+    ch.drop_heartbeats(1)
+    assert ch.dropped_heartbeats() == {1}
+    ch.restore_heartbeats(1)
+    assert ch.dropped_heartbeats() == set()
+    assert ch.squeeze({"R": 100, "S": 3}) == {"R": 100, "S": 3}
+    ch.squeeze_caps(0.01)
+    assert ch.squeeze({"R": 100, "S": 3}) == {"R": 1, "S": 1}
