@@ -29,6 +29,11 @@ Tables:
                       device loss -> survivor re-fold, straggler -> eviction;
                       recovery must be bit-exact and retries/re-folds must
                       compile zero new executables; emits BENCH_recover.json
+  adapt_scaling       online skew adaptation on a drifting stream: mild
+                      drift -> drift-triggered re-placement (traced table,
+                      zero recompile), step drift -> sketch-driven warm
+                      re-plan; adaptive vs static makespan post-shift must
+                      improve and stay bit-exact; emits BENCH_adapt.json
   kernel_throughput   hash_partition / match_counts / segment_histogram
   planner_latency     plan_skew_join wall time vs #HH (control-plane budget)
 """
@@ -770,6 +775,140 @@ def bench_recover_scaling():
     row("recover_scaling/json", 0.0, f"path={out_path}")
 
 
+def bench_adapt_scaling():
+    """Online skew adaptation — the drift table.
+
+    A deterministic drifting stream (data/synthetic.drifting_join_batch: the
+    hot tail values move between cell slices mid-stream while the HH set and
+    per-combination row counts stay pinned) is run through two sessions over
+    the SAME executor: a static `SelfHealingSession` that keeps its phase-A
+    LPT placement, and an adaptive one whose `DriftDetector` watches the
+    per-batch cell loads.  The gate (scripts/check_bench.py) fails the build
+    on any non-exact batch, on an adaptive post-shift makespan that does not
+    beat the static session's, or on a warm re-placement / re-plan that
+    compiled a new executable:
+
+      mild_drift   hot set shifts partially: TV drift crosses the replace
+                   threshold only -> `lpt_placement` re-run on observed
+                   loads, traced table swapped (zero recompile), no replan;
+      step_drift   hot set jumps slices entirely: graded thresholds escalate
+                   to a re-plan from the sketched HH set; the pinned combos
+                   make the residual plan byte-identical, so the plan cache
+                   and warm step cache serve it with zero new compiles.
+
+    Makespan = max over devices of rows received (recv_counts), averaged over
+    the final post-shift batches.  Emits BENCH_adapt.json."""
+    import jax
+    if len(jax.devices()) < 8:
+        row("adapt_scaling/skipped", 0.0, "needs 8 devices")
+        return
+    from collections import defaultdict
+
+    from repro.core import canonical, plan_skew_join, reference_join, two_way
+    from repro.core.adapt import AdaptPolicy
+    from repro.core.executor import ExecutorConfig, ShardedJoinExecutor
+    from repro.data import drifting_join_batch
+    from repro.launch.mesh import make_mesh_compat
+    from repro.serve import SelfHealingSession
+
+    n_dev, n, hh_rows, dom, nhot, bonus, k = 8, 1024, 128, 128, 6, 24, 32
+    mesh = make_mesh_compat((n_dev,), ("cells",))
+    q = two_way()
+
+    # Group tail values by which cell slice the plan routes them to, so a
+    # "hot set" concentrates load on few cells and moving it is real drift
+    # (hash collisions between slices would otherwise cancel the signal).
+    base = drifting_join_batch(q, n, hh_rows, dom, [], 0, seed=0)
+    plan0 = plan_skew_join(q, base, k)
+    vals = np.arange(2, dom + 2, dtype=np.int64)
+    arr = np.stack([np.zeros_like(vals), vals], axis=1)
+    ridx, dest = plan0.route_relation("R", arr)
+    per_val = defaultdict(set)
+    for r, d in zip(ridx, dest):
+        per_val[int(vals[r])].add(int(d))
+    by_slice = defaultdict(list)
+    for v, ds in sorted(per_val.items()):
+        by_slice[tuple(sorted(ds))].append(v - 2)
+    slices = [vs for _, vs in sorted(by_slice.items())]
+    hot_a = [vs[0] for vs in slices[:nhot]]
+    hot_b = [vs[0] for vs in slices[-nhot:]]
+
+    report = {"n_devices": n_dev, "k": k, "workload": {
+        "query": str(q), "n_per_relation": n, "hh_rows": hh_rows,
+        "tail_domain": dom, "hot_values": nhot, "hot_bonus": bonus,
+        "pre_shift_batches": 4, "post_shift_batches": 10,
+        "makespan_window": 5}, "scenarios": {}}
+
+    def _scenario(name, policy, hot_post):
+        data0 = drifting_join_batch(q, n, hh_rows, dom, hot_a, bonus, seed=1)
+        ex = ShardedJoinExecutor(plan_skew_join(q, data0, k), mesh,
+                                 config=ExecutorConfig(out_capacity=1 << 16))
+        adaptive = SelfHealingSession(ex, adapt=policy).prepare(data0)
+        static = SelfHealingSession(ex).prepare(data0)
+        batches = ([drifting_join_batch(q, n, hh_rows, dom, hot_a, bonus,
+                                        seed=100 + i) for i in range(4)] +
+                   [drifting_join_batch(q, n, hh_rows, dom, hot_post, bonus,
+                                        seed=200 + i) for i in range(10)])
+        exact, ms_a, ms_s, t_us = True, [], [], 0.0
+        for b in batches:
+            expect = reference_join(q, b)
+            t0 = time.perf_counter()
+            res_a = adaptive.run_batch(b)
+            t_us += (time.perf_counter() - t0) * 1e6
+            res_s = static.run_batch(b)
+            for res in (res_a, res_s):
+                got = res["rows"][res["valid"]]
+                exact = exact and (len(got) == len(expect)
+                                   and bool((canonical(got) == expect).all()))
+            ms_a.append(int(res_a["recv_counts"].max()))
+            ms_s.append(int(res_s["recv_counts"].max()))
+        st = adaptive.stats
+        win = report["workload"]["makespan_window"]
+        entry = {
+            "replacements": st["replacements"],
+            "replace_compiles": st["replace_compiles"],
+            "replans": st["replans"],
+            "replan_compiles": st["replan_compiles"],
+            "actions": [(i, act, round(tv, 4))
+                        for i, act, tv in adaptive.detector.history],
+            "exact": exact,
+            "adaptive_makespan": float(np.mean(ms_a[-win:])),
+            "static_makespan": float(np.mean(ms_s[-win:])),
+            "makespan_ratio": float(np.mean(ms_a[-win:])
+                                    / max(np.mean(ms_s[-win:]), 1e-9)),
+            "adaptive_us_per_batch": t_us / len(batches),
+        }
+        report["scenarios"][name] = entry
+        row(f"adapt_scaling/{name}", entry["adaptive_us_per_batch"],
+            f"replacements={entry['replacements']};replans={entry['replans']};"
+            f"replace_compiles={entry['replace_compiles']};"
+            f"replan_compiles={entry['replan_compiles']};"
+            f"exact={entry['exact']};"
+            f"makespan={entry['adaptive_makespan']:.0f}"
+            f"_vs_static={entry['static_makespan']:.0f}"
+            f"({entry['makespan_ratio']:.2f}x)")
+
+    # mild: replan threshold far above any observable TV -> replace only.
+    _scenario("mild_drift",
+              AdaptPolicy(replace_threshold=0.015, replan_threshold=0.5,
+                          window=4, patience=2, min_batches=2,
+                          replace_cooldown=2, replan_cooldown=4),
+              hot_a[:-2] + hot_b[:2])
+    # step: thresholds below half the step TV (window dilution halves the
+    # observed distance while old batches age out) -> graded replan fires.
+    _scenario("step_drift",
+              AdaptPolicy(replace_threshold=0.015, replan_threshold=0.04,
+                          window=4, patience=2, min_batches=2,
+                          replace_cooldown=2, replan_cooldown=4),
+              hot_b)
+
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_adapt.json")
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    row("adapt_scaling/json", 0.0, f"path={out_path}")
+
+
 def bench_kernel_throughput():
     """Kernel wrappers (jit'd ref path on CPU; Pallas compiles on TPU)."""
     import jax
@@ -821,6 +960,7 @@ def main() -> None:
     bench_map_scaling()
     bench_reduce_v2()
     bench_recover_scaling()
+    bench_adapt_scaling()
     bench_kernel_throughput()
     bench_planner_latency()
     print(f"# {len(ROWS)} rows")

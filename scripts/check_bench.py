@@ -1,7 +1,8 @@
 """Benchmark smoke check — the CI step that runs after pytest (scripts/ci.sh).
 
 Runs the executor-facing tables of benchmarks/run.py (executor_e2e,
-reduce_scaling, shuffle_scaling, fold_scaling, kernel_throughput) and FAILS
+reduce_scaling, shuffle_scaling, fold_scaling, map_scaling, reduce_v2,
+recover_scaling, adapt_scaling, kernel_throughput) and FAILS
 (exit 1) if any row reports a capacity overflow or a non-exact output — the
 silent-wrongness modes of the fixed-capacity data plane — or if a required
 table (or its BENCH_*.json artifact) is missing entirely.  Timing is reported
@@ -70,6 +71,28 @@ docs/architecture.md readers).  Every artifact is a single JSON object:
     actually evicts/retries (a chaos run that injected nothing must not
     pass); the evicted device receives zero rows.
 
+  BENCH_adapt.json
+    n_devices        int     physical mesh size
+    k                int     logical cells
+    workload         object  query, n_per_relation, hh_rows, tail_domain,
+                             hot_values, hot_bonus, pre/post_shift_batches,
+                             makespan_window
+    scenarios        object  two entries (drifting_join_batch streams, the
+                             hot tail values move mid-stream):
+        mild_drift   replacements, replace_compiles, replans,
+                     replan_compiles, actions (list of [batch, action, tv]),
+                     exact (bool), adaptive_makespan, static_makespan,
+                     makespan_ratio, adaptive_us_per_batch
+        step_drift   same fields; the graded thresholds escalate to a
+                     re-plan from the sketched HH set
+    Gate: every batch bit-exact for both sessions; the adaptive session's
+    post-shift makespan must BEAT the static session's (ratio < 1 — the
+    adaptation's only reason to exist); mild drift heals with re-placement
+    alone (replans == 0) and step drift actually re-plans (replans >= 1); a
+    re-placement never compiles, and a re-plan over the pinned combos hits
+    the plan + step caches (replan_compiles == 0); a run where no action
+    fired must not pass.
+
 New benchmarks follow the same shape: top-level scalars for the workload, one
 list of per-sweep-point entries each carrying its own `exact`/overflow fields
 (so this script can gate them), and a `row(...)` CSV line per entry.
@@ -97,7 +120,8 @@ def main() -> int:
     # Delete the committed artifacts first so the missing-artifact checks
     # below prove this run REGENERATED them (not that stale copies existed).
     for name in ("BENCH_shuffle.json", "BENCH_fold.json", "BENCH_map.json",
-                 "BENCH_reduce.json", "BENCH_recover.json"):
+                 "BENCH_reduce.json", "BENCH_recover.json",
+                 "BENCH_adapt.json"):
         stale = os.path.join(_REPO, name)
         if os.path.exists(stale):
             os.remove(stale)
@@ -109,6 +133,7 @@ def main() -> int:
     bench.bench_map_scaling()
     bench.bench_reduce_v2()
     bench.bench_recover_scaling()
+    bench.bench_adapt_scaling()
     bench.bench_kernel_throughput()
 
     failures: list[str] = []
@@ -325,6 +350,58 @@ def main() -> int:
             failures.append(
                 "BENCH_recover.json device_loss: first degraded-mode batch "
                 "recompiled (placement must be a traced argument)")
+
+    # The adapt table must exist and prove the online-adaptation contracts:
+    # bit-exact drift handling, adaptive beating static post-shift, and zero
+    # compiles on warm re-placement / re-plan.
+    if not any(n.startswith("adapt_scaling/") and "skipped" not in n
+               for n, _, _ in bench.ROWS):
+        failures.append(
+            "adapt_scaling table missing (needs 8 devices — check "
+            "XLA_FLAGS xla_force_host_platform_device_count)")
+    adapt_path = os.path.join(_REPO, "BENCH_adapt.json")
+    if not os.path.exists(adapt_path):
+        failures.append(f"missing artifact {adapt_path}")
+    else:
+        report = json.load(open(adapt_path))
+        scen = report.get("scenarios") or {}
+        for name in ("mild_drift", "step_drift"):
+            e = scen.get(name) or {}
+            if not e:
+                failures.append(f"BENCH_adapt.json: scenario {name} missing")
+                continue
+            if not e.get("exact"):
+                failures.append(
+                    f"BENCH_adapt.json {name}: adapted output not bit-exact")
+            if e.get("makespan_ratio", 1.0) >= 1.0:
+                failures.append(
+                    f"BENCH_adapt.json {name}: adaptive makespan "
+                    f"{e.get('adaptive_makespan')} did not beat static "
+                    f"{e.get('static_makespan')} — adaptation bought nothing")
+            if e.get("replace_compiles", 1) != 0:
+                failures.append(
+                    f"BENCH_adapt.json {name}: a re-placement compiled "
+                    f"{e.get('replace_compiles')} new executables (traced "
+                    f"placement should recompile nothing)")
+            if e.get("replan_compiles", 1) != 0:
+                failures.append(
+                    f"BENCH_adapt.json {name}: a warm re-plan compiled "
+                    f"{e.get('replan_compiles')} new executables (the plan/"
+                    f"step caches regressed)")
+        mild = scen.get("mild_drift") or {}
+        if mild.get("replacements", 0) < 1:
+            failures.append(
+                "BENCH_adapt.json mild_drift: drift never triggered a "
+                "re-placement (the scenario proved nothing)")
+        if mild.get("replans", 1) != 0:
+            failures.append(
+                f"BENCH_adapt.json mild_drift: {mild.get('replans')} replans "
+                f"on mild drift (graded thresholds regressed — mild drift "
+                f"must heal with re-placement alone)")
+        if (scen.get("step_drift") or {}).get("replans", 0) < 1:
+            failures.append(
+                "BENCH_adapt.json step_drift: the step shift never escalated "
+                "to a re-plan (the scenario proved nothing)")
 
     if failures:
         print("\nBENCH CHECK FAILED:", file=sys.stderr)

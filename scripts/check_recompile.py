@@ -12,7 +12,11 @@ in the traced function's own cache.  Asserted two ways:
   * retry-within-a-bucket — an overflow-retry escalation ladder the executor
     has already walked (same shapes, same start caps on the capacity-bucket
     grid) compiles ZERO new executables when a second session walks it again
-    (the self-healing contract: retries are warm, not recompiles).
+    (the self-healing contract: retries are warm, not recompiles);
+  * adapt-warm — a drift-triggered re-placement (placement is a traced
+    argument) and a re-plan whose pinned workload hits the executor plan
+    cache compile ZERO new steps (the online-adaptation contract:
+    `replace_compiles == replan_compiles == 0`).
 
 Exit 1 on any violation.  Usage:  python scripts/check_recompile.py
 """
@@ -95,6 +99,43 @@ def main() -> int:
             f"retry-within-a-bucket recompiled: second ladder walk built "
             f"{ex.compile_count - builds_after_first} new steps (want 0)")
 
+    # Adapt warmth: forced re-placement swaps the traced placement table, and
+    # a forced re-plan over the SAME pinned data hits the plan cache (same
+    # HH set, same per-combination counts -> same route specs) — neither may
+    # build a step.
+    from repro.core.adapt import AdaptPolicy
+    from repro.data import drifting_join_batch
+    from repro.serve import SelfHealingSession
+
+    adata = drifting_join_batch(q, 512, 64, 64, [3, 7], 16, seed=5)
+    aplan = plan_skew_join(q, adata, 16)
+    aex = ShardedJoinExecutor(aplan, make_mesh_compat((8,), ("cells",)),
+                              config=ExecutorConfig(out_capacity=32768))
+    eng = SelfHealingSession(aex, adapt=AdaptPolicy()).prepare(adata)
+    eng.run_batch()
+    builds_warm = aex.compile_count
+    eng.force_replace()
+    eng.run_batch()
+    eng.force_replan()
+    eng.run_batch()
+    st = eng.stats
+    if st["replacements"] != 1 or st["replans"] != 1:
+        failures.append(
+            f"adapt scenario did not act: replacements={st['replacements']} "
+            f"replans={st['replans']} (want 1 each)")
+    if st["replace_compiles"] != 0:
+        failures.append(
+            f"drift re-placement recompiled: {st['replace_compiles']} step "
+            f"builds (placement must be a traced argument)")
+    if st["replan_compiles"] != 0:
+        failures.append(
+            f"same-plan re-plan recompiled: {st['replan_compiles']} step "
+            f"builds (the executor plan cache regressed)")
+    if aex.compile_count != builds_warm:
+        failures.append(
+            f"adapt scenario built {aex.compile_count - builds_warm} new "
+            f"steps after the warm batch (want 0)")
+
     if failures:
         print("RECOMPILE GUARD FAILED:", file=sys.stderr)
         for f in failures:
@@ -103,7 +144,7 @@ def main() -> int:
     traces = cache_size() if cache_size else "untracked"
     print(f"# recompile guard ok (1 step build, {traces} cached trace "
           f"across 4 warm calls; retry ladder of {retries_first} retries "
-          f"warm on the second walk)")
+          f"warm on the second walk; adapt re-place + re-plan warm)")
     return 0
 
 

@@ -8,12 +8,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 # straggler eviction, corrupted rows) must recover bit-exact.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q tests/test_chaos.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_bench.py
-# check_bench regenerates every BENCH_*.json (map_scaling, reduce_v2 and
-# recover_scaling included) and fails on non-exact/overflow/hash-path or
-# self-healing (unbounded retry / recompile-on-retry) regressions; the
-# artifacts must exist afterwards.
+# check_bench regenerates every BENCH_*.json (map_scaling, reduce_v2,
+# recover_scaling and adapt_scaling included) and fails on
+# non-exact/overflow/hash-path, self-healing (unbounded retry /
+# recompile-on-retry) or adaptation (static beats adaptive / warm re-plan
+# recompiled) regressions; the artifacts must exist afterwards.
 test -f BENCH_shuffle.json -a -f BENCH_fold.json -a -f BENCH_map.json \
-     -a -f BENCH_reduce.json -a -f BENCH_recover.json
+     -a -f BENCH_reduce.json -a -f BENCH_recover.json -a -f BENCH_adapt.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_recompile.py
 
 # The documented entry points must not rot: each example asserts its own

@@ -821,8 +821,9 @@ class ExecutorSession:
         self.caps: dict[str, int] = {}
         self.cap_out: int = int(executor.config.out_capacity)
         self.placement: CellPlacement | None = None
-        self.count_passes = 0           # routing passes run by prepare()
+        self.count_passes = 0           # routing passes run (prepare + adapt)
         self._device_args: list[jnp.ndarray] | None = None
+        self._last_args: list[jnp.ndarray] | None = None   # last executed batch
         self._ptable_dev: jnp.ndarray | None = None
         self._shapes: tuple | None = None
         self._count_mats: list[np.ndarray] | None = None
@@ -888,11 +889,29 @@ class ExecutorSession:
         self._count_mats = counts       # None when caps+placement were given
         return self
 
-    def _counts(self) -> list[np.ndarray]:
+    def _counts(self, args: list[jnp.ndarray] | None = None
+                ) -> list[np.ndarray]:
         """Per-relation (n_devices, k) routed-copy count matrices (host)."""
         self.count_passes += 1
+        args = self._device_args if args is None else args
         return [np.asarray(c, np.int64)
-                for c in self.executor._count_pass()(*self._device_args)]
+                for c in self.executor._count_pass()(*args)]
+
+    def count_batch(self) -> list[np.ndarray]:
+        """Count matrices of the LAST executed batch (the prepared relations
+        until a chunked `run_batch` ran).  One extra scatter-free counting
+        pass over the already-resident device arrays — the adaptive loop's
+        per-batch observation hook (core/adapt.py): column sums are the
+        observed per-cell loads a drift detector windows, and folding the
+        matrices through a candidate placement re-derives capacities for a
+        drift-triggered re-placement.  Increments `count_passes` (prepare's
+        routes-data-once guarantee is about prepare, which still runs exactly
+        one)."""
+        if self._shapes is None:
+            raise RuntimeError("ExecutorSession.count_batch before prepare()")
+        if not self.executor.plan.residuals:
+            return []
+        return self._counts(self._last_args)
 
     def _derive_caps(self, counts: list[np.ndarray],
                      placement: CellPlacement) -> dict[str, int]:
@@ -920,7 +939,8 @@ class ExecutorSession:
             self._count_mats = self._counts()
         return np.sum([c.sum(axis=0) for c in self._count_mats], axis=0)
 
-    def refold(self, placement: CellPlacement) -> "ExecutorSession":
+    def refold(self, placement: CellPlacement,
+               counts: list[np.ndarray] | None = None) -> "ExecutorSession":
         """Re-place logical cells WITHOUT touching shapes or resident data.
 
         Uploads the new table (a traced step argument — re-placing never
@@ -932,7 +952,12 @@ class ExecutorSession:
         straggling device is `refold(lpt_placement(session.cell_loads(),
         n_devices, devices=survivors))` — the dead device keeps its mesh
         slot (SPMD collectives need it) but receives zero cells, and outputs
-        stay bit-exact because correctness never depends on placement."""
+        stay bit-exact because correctness never depends on placement.
+
+        `counts` overrides the capacity source with OBSERVED count matrices
+        (e.g. `count_batch()` of a drifted batch) so a drift-triggered
+        re-placement sizes capacities for the traffic it is adapting to; the
+        prepare-time matrices stay cached for later default refolds."""
         ex = self.executor
         if self._shapes is None:
             raise RuntimeError("ExecutorSession.refold before prepare()")
@@ -941,9 +966,11 @@ class ExecutorSession:
         if not ex.plan.residuals:
             return self
         self._ptable_dev = ex._upload_table(placement)
-        if self._count_mats is None:
-            self._count_mats = self._counts()
-        self.caps = self._derive_caps(self._count_mats, placement)
+        if counts is None:
+            if self._count_mats is None:
+                self._count_mats = self._counts()
+            counts = self._count_mats
+        self.caps = self._derive_caps(counts, placement)
         return self
 
     def run_batch(self, chunks: Mapping[str, np.ndarray] | None = None
@@ -980,6 +1007,7 @@ class ExecutorSession:
                                   INVALID, sh.dtype)
                     sh = np.concatenate([sh, pad])
                 args.append(ex._upload(sh))
+        self._last_args = args          # count_batch()'s observation target
         shapes = tuple(a.shape for a in args)
         if shapes != self._shapes:
             # A chunk larger than the prepared shapes cannot pad down: it

@@ -70,14 +70,39 @@ def exact_heavy_hitters(
     return HHSet(out)
 
 
+def _reduce_counters(cs: dict[int, int], m: int) -> dict[int, int]:
+    """Decrement a counter dict until at most m survivors remain.
+
+    One round subtracts the (m+1)-th largest count from everything and keeps
+    the strictly positive remainder — at least one counter (the cut itself)
+    hits zero, so each round strictly shrinks the dict.  A single round is the
+    classical merge reduction, but when several counts TIE at the cut the
+    survivors {c : c > cut} can still number more than m (zeros of the tie all
+    die, yet distinct larger counts may exceed m when the cut is 0 after an
+    earlier subtraction) — so loop until the invariant len ≤ m holds, with the
+    cut floored at 1 to guarantee progress even on all-equal counts.
+
+    Error accounting (why the N/m guarantee survives): every round subtracts
+    `cut` from AT LEAST m+1 counters (the m survivors' upper bound plus the
+    dying ones), so the total weight removed is ≥ cut·(m+1).  Weight removed
+    over the sketch's lifetime cannot exceed the weight inserted, N, hence
+    Σ cut_r ≤ N/(m+1) < N/m — any single value is under-counted by at most
+    Σ cut_r, which keeps true_count − N/m ≤ estimate ≤ true_count.
+    """
+    while len(cs) > m:
+        cut = max(1, sorted(cs.values(), reverse=True)[m])
+        cs = {v: c - cut for v, c in cs.items() if c > cut}
+    return cs
+
+
 @dataclass
 class MisraGries:
     """Misra–Gries frequent-items sketch with m counters.
 
     Guarantee: for every value v, true_count - N/m ≤ estimate(v) ≤ true_count,
-    where N is the stream length.  Sketches over disjoint shards merge by
+    where N is the total weight seen.  Sketches over disjoint shards merge by
     summing counters then decrementing back down to m survivors, preserving the
-    guarantee with N = Σ N_shard.
+    guarantee with N = Σ N_shard (`_reduce_counters` carries the argument).
     """
 
     m: int
@@ -101,23 +126,55 @@ class MisraGries:
                 for key in dead:
                     del self.counters[key]
 
+    def update_counts(self, values: Iterable[int],
+                      counts: Iterable[int]) -> None:
+        """Weighted batch update: absorb an exact (value, count) histogram.
+
+        Equivalent (up to the guarantee) to `update` over the expanded stream
+        but O(distinct) — the adaptive loop feeds whole batch columns through
+        one `np.unique` per batch instead of per-row Python.  An exact
+        histogram is an error-free sketch, so this is a merge: add the
+        weights, then reduce back to m survivors.
+        """
+        for v, c in zip(np.asarray(list(values)).ravel(),
+                        np.asarray(list(counts)).ravel()):
+            c = int(c)
+            if c <= 0:
+                continue
+            v = int(v)
+            self.n_seen += c
+            self.counters[v] = self.counters.get(v, 0) + c
+        self.counters = _reduce_counters(self.counters, self.m)
+
     def estimate(self, x: int) -> int:
         return self.counters.get(int(x), 0)
 
     def merge(self, other: "MisraGries") -> "MisraGries":
-        merged = MisraGries(self.m)
+        """Combine two shard sketches (Agarwal et al.'s mergeability).
+
+        The merged sketch keeps the weaker (smaller-m) guarantee of the two;
+        `_reduce_counters` handles count ties at the cut, so the result always
+        has ≤ min(m) survivors."""
+        merged = MisraGries(min(self.m, other.m))
         merged.n_seen = self.n_seen + other.n_seen
         cs = dict(self.counters)
         for v, c in other.counters.items():
             cs[v] = cs.get(v, 0) + c
-        if len(cs) > self.m:
-            # Decrement all by the (len-m)-th largest count to keep ≤ m survivors.
-            cut = sorted(cs.values(), reverse=True)[self.m]
-            cs = {v: c - cut for v, c in cs.items() if c - cut > 0}
-        merged.counters = cs
+        merged.counters = _reduce_counters(cs, merged.m)
         return merged
 
     def heavy_hitters(self, n_total: int, frac: float) -> tuple[int, ...]:
         """Values that MAY exceed frac·n_total (no false negatives)."""
         floor = frac * n_total - n_total / self.m
         return tuple(sorted(v for v, c in self.counters.items() if c > floor))
+
+    def certain_heavy_hitters(self, frac: float) -> tuple[int, ...]:
+        """Values whose SKETCH count alone exceeds frac·n_seen.
+
+        Counters only ever under-count, so each of these is a TRUE heavy
+        hitter (no false positives) — the dual of `heavy_hitters`'s
+        no-false-negative candidate set.  The drift detector uses this as its
+        definite new-heavy-hitter trigger: a replan fires only on values the
+        sketch can prove, never on slack."""
+        return tuple(sorted(v for v, c in self.counters.items()
+                            if c > frac * self.n_seen))

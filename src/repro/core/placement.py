@@ -168,6 +168,23 @@ def place_cells(cell_loads: np.ndarray | None, k: int, n_devices: int,
     return lpt_placement(loads, n_devices, devices)
 
 
+def placement_gain(cell_loads: np.ndarray, placement: CellPlacement,
+                   devices: list[int] | None = None) -> tuple[float, float]:
+    """(current, best) max/mean device imbalance of `cell_loads` under the
+    existing placement vs a fresh LPT pack over the same (or a survivor
+    subset of) devices.
+
+    The re-placement value signal for the adaptive loop (core/adapt.py):
+    drift says the load DISTRIBUTION moved, this says whether moving cells
+    can actually flatten the makespan — current/best close to 1 means the
+    observed loads are already near-optimally folded and a re-placement
+    would churn the table for nothing."""
+    cur = placement.imbalance(cell_loads)
+    best = lpt_placement(cell_loads, placement.n_devices,
+                         devices).imbalance(cell_loads)
+    return cur, best
+
+
 def check_fold(k: int, n_devices: int) -> None:
     """The folding contract: power-of-two k, at least one cell per device.
     (k need not be a multiple of n_devices — LPT doesn't care.)  Shared by

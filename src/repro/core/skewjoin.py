@@ -201,15 +201,24 @@ def _allocate_budget(residuals: list[ResidualJoin], k: int
     return list(zip(residuals, k_i, sols))
 
 
-def plan_skew_join(
+def plan_from_hhs(
     query: JoinQuery,
     data: Mapping[str, np.ndarray],
     k: int,
-    threshold_factor: float = 1.0,
-    max_hh_per_attr: int = 64,
+    hhs: HHSet,
 ) -> SkewJoinPlan:
-    """Full SkewShares plan for `query` over `data` with `k` reducers."""
-    hhs = exact_heavy_hitters(data, query, k, threshold_factor, max_hh_per_attr)
+    """Assemble the SkewShares plan from an EXTERNALLY supplied HH set.
+
+    The planner's steps 2–5 (residual sizes, decomposition, k_i allocation,
+    Hypercube assembly) with step 1 — HH detection — factored out: the exact
+    planner hands in its histogram HHs (`plan_skew_join`), the online
+    adaptation loop (core/adapt.py) hands in the windowed Misra–Gries
+    sketch's set and a recent batch as the size sample.  Residual sizes
+    depend on the data ONLY through per-attribute HH membership counts, so
+    two datasets with the same HH set and the same per-type-combination row
+    counts yield structurally identical plans — route specs and all — which
+    is what lets a drift-triggered re-plan land on an already-compiled
+    executor (serve/engine.py keys its plan cache on the route specs)."""
     sizes = {c: residual_sizes(data, query, c, hhs)
              for c in enumerate_combinations(hhs)}
     residuals = decompose(query, hhs, sizes)
@@ -229,22 +238,23 @@ def plan_skew_join(
     return SkewJoinPlan(query, hhs, tuple(plans), k)
 
 
+def plan_skew_join(
+    query: JoinQuery,
+    data: Mapping[str, np.ndarray],
+    k: int,
+    threshold_factor: float = 1.0,
+    max_hh_per_attr: int = 64,
+) -> SkewJoinPlan:
+    """Full SkewShares plan for `query` over `data` with `k` reducers."""
+    hhs = exact_heavy_hitters(data, query, k, threshold_factor, max_hh_per_attr)
+    return plan_from_hhs(query, data, k, hhs)
+
+
 def plan_no_skew(query: JoinQuery, data: Mapping[str, np.ndarray], k: int
                  ) -> SkewJoinPlan:
     """Plain Shares plan (no HH handling) — the paper's baseline strawman."""
     hhs = HHSet({a: () for a in query.join_attributes()})
-    sizes = {c: residual_sizes(data, query, c, hhs)
-             for c in enumerate_combinations(hhs)}
-    residuals = decompose(query, hhs, sizes)
-    allocated = _allocate_budget(residuals, k)
-    plans, offset = [], 0
-    for salt, (res, ki, sol) in enumerate(allocated):
-        order = tuple(res.expr.free_attrs)
-        shares = tuple(sol.shares.get(a, 1) for a in order)
-        cube = Hypercube(order, shares, offset=offset, salt=salt)
-        plans.append(ResidualPlan(res, ki, sol, cube))
-        offset += cube.n_cells
-    return SkewJoinPlan(query, hhs, tuple(plans), k)
+    return plan_from_hhs(query, data, k, hhs)
 
 
 def naive_two_way_cost(data: Mapping[str, np.ndarray], query: JoinQuery,

@@ -1,6 +1,7 @@
 """repro.data — data pipeline: synthetic skewed relations + tokenized LM batches."""
-from .synthetic import zipf_column, skewed_relation, skewed_join_dataset
+from .synthetic import (zipf_column, skewed_relation, skewed_join_dataset,
+                        drifting_join_batch)
 from .pipeline import TokenPipeline, PipelineConfig
 
 __all__ = ["zipf_column", "skewed_relation", "skewed_join_dataset",
-           "TokenPipeline", "PipelineConfig"]
+           "drifting_join_batch", "TokenPipeline", "PipelineConfig"]

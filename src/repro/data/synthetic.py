@@ -37,6 +37,65 @@ def skewed_relation(
     return np.stack(cols, axis=1)
 
 
+def drifting_join_batch(
+    query: JoinQuery,
+    n: int,
+    hh_rows: int,
+    tail_domain: int,
+    hot_set: Sequence[int],
+    hot_bonus: int,
+    seed: int = 0,
+    extra_hh: Mapping[str, int] | None = None,
+) -> dict[str, np.ndarray]:
+    """One deterministic batch of a drifting stream, combos pinned by design.
+
+    Join attributes get `hh_rows` rows of the heavy value 0 plus exactly
+    n - hh_rows tail rows over values 1..tail_domain: every tail value
+    carries a uniform base count, and the values in `hot_set` carry
+    `hot_bonus` extra rows each (any remainder tops up the first tail
+    values).  Moving `hot_set` between batches moves cell load — drift — but
+    the per-value counts stay far below any HH threshold and the
+    (HH rows, tail rows) split NEVER changes, so two batches with the same
+    `extra_hh` yield byte-identical residual-join sizes and hence the SAME
+    SkewShares plan (`plan_from_hhs`): the warm re-plan scenario the
+    adaptive session's plan cache exists for.  `extra_hh[attr] = rows`
+    promotes value 1 to a genuine second heavy hitter (carved out of the
+    tail budget) — the honest-cold-replan scenario.  Non-join attributes
+    cycle uniformly.  Fully deterministic given the arguments; `seed` only
+    shuffles row order so batches are not sorted by value.
+    """
+    extra_hh = extra_hh or {}
+    join_attrs = set(query.join_attributes())
+    hot = sorted({int(v) for v in hot_set if 0 <= int(v) < tail_domain})
+    rng = np.random.default_rng(seed)
+    out = {}
+    for rel in query.relations:
+        cols = []
+        for a in rel.attrs:
+            if a not in join_attrs:
+                cols.append(np.arange(n, dtype=np.int64) % max(tail_domain, 1))
+                continue
+            promo = int(extra_hh.get(a, 0))
+            n_tail = n - hh_rows - promo - hot_bonus * len(hot)
+            if n_tail < 0:
+                raise ValueError(
+                    f"hh_rows + extra_hh + hot bonus exceed n={n}")
+            # Uniform base + largest-remainder top-up, then the hot bonus:
+            # counts sum to n - hh_rows - promo exactly, deterministically.
+            counts = np.full(tail_domain, n_tail // tail_domain, np.int64)
+            counts[:n_tail % tail_domain] += 1
+            counts[hot] += hot_bonus
+            vals = np.concatenate([
+                np.zeros(hh_rows, np.int64),
+                np.full(promo, 1, np.int64),
+                np.repeat(np.arange(tail_domain, dtype=np.int64) + 2, counts),
+            ])
+            cols.append(vals)
+        arr = np.stack([c[:n] for c in cols], axis=1)
+        out[rel.name] = arr[rng.permutation(n)]
+    return out
+
+
 def skewed_join_dataset(
     query: JoinQuery,
     n_per_relation: int | Mapping[str, int],

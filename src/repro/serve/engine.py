@@ -29,9 +29,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
+from ..core.adapt import AdaptPolicy, DriftDetector
 from ..core.executor import (DeviceLossError, ExecutorSession, RetryPolicy,
-                             ShardedJoinExecutor)
+                             ShardedJoinExecutor, _build_routes, _route_specs)
 from ..core.placement import lpt_placement
+from ..core.skewjoin import plan_from_hhs
 from ..ft import ChaosInjector, HealthMonitor, StragglerWatchdog
 from ..models import api
 from .serve_step import ServeFns, build_decode_step
@@ -150,7 +152,26 @@ class SelfHealingSession:
                      because correctness never depends on placement;
       stragglers  -> per-device step timings feed `StragglerWatchdog`;
                      `evict_after` consecutive strikes evicts the device
-                     through the same re-fold path.
+                     through the same re-fold path;
+      skew drift  -> pass `adapt=AdaptPolicy(...)` and every executed batch
+                     feeds a `DriftDetector` (core/adapt.py): one extra
+                     scatter-free counting pass yields the batch's per-cell
+                     loads, the raw join columns feed windowed Misra–Gries
+                     sketches.  Mild drift re-runs LPT on the OBSERVED loads
+                     and swaps the traced placement table (`_replace` — zero
+                     recompile, same discipline as the eviction re-fold);
+                     threshold-crossing drift or a sketch-proven new heavy
+                     hitter re-derives the residual plan from the sketched
+                     HH set (`_replan`) — plans are cached by route-spec
+                     signature and the new session inherits the old one's
+                     bucketed capacities, so a structurally unchanged
+                     re-plan costs one prepare on the warm step cache, not
+                     a cold compile.  Honesty counters in `stats`:
+                     `replacements` / `replans` count actions,
+                     `replace_compiles` / `replan_compiles` count the ones
+                     whose capacities left the warm bucket (0 is the
+                     contract on stable structure; a genuinely new HH set
+                     compiles and is counted, never hidden).
 
     On one host the SPMD step yields no true per-device timings, so
     `timing_fn(wall_s) -> (n_devices,) seconds` defaults to uniform wall
@@ -169,7 +190,8 @@ class SelfHealingSession:
                  straggler_threshold: float = 1.5,
                  evict_after: int = 5,
                  step_seconds: float = 1.0,
-                 timing_fn: Callable[[float], np.ndarray] | None = None):
+                 timing_fn: Callable[[float], np.ndarray] | None = None,
+                 adapt: AdaptPolicy | None = None):
         self.executor = executor
         self.session: ExecutorSession = executor.session()
         self.retry = retry or RetryPolicy()
@@ -186,6 +208,29 @@ class SelfHealingSession:
         self.refold_compiles = 0        # refolds whose caps left the bucket
         self.step_seconds = float(step_seconds)
         self.timing_fn = timing_fn
+        # -- the adaptation axis (core/adapt.py) --
+        self.adapt = adapt
+        self.detector: DriftDetector | None = None
+        self.replacements = 0
+        self.replace_compiles = 0       # re-placements that left the bucket
+        self.replans = 0
+        self.replan_compiles = 0        # re-plans that missed the step cache
+        # Executors keyed by route-spec signature: a re-derived plan with the
+        # same HH set and residual structure maps to the SAME executor (and
+        # its warm step cache) instead of a cold rebuild.
+        self._plan_cache: dict[tuple, ShardedJoinExecutor] = {}
+        self._prepared_data: Mapping[str, np.ndarray] | None = None
+        self._last_data: Mapping[str, np.ndarray] | None = None
+        self._last_counts: list[np.ndarray] | None = None
+        self._retired_stats: dict | None = None   # superseded sessions' sums
+
+    @staticmethod
+    def _spec_key(executor: ShardedJoinExecutor) -> tuple:
+        """Hashable identity of a plan's compiled ROUTING structure: two
+        plans with equal keys route identically, so they can share one
+        executor (k rides along because wrap-mod-k is part of routing)."""
+        return (executor.plan.k,
+                tuple(sorted(executor.route_specs.items())))
 
     def prepare(self, data: Mapping[str, np.ndarray], **kw
                 ) -> "SelfHealingSession":
@@ -193,15 +238,41 @@ class SelfHealingSession:
         self.session.prepare(data, **kw)
         if self.chaos is not None and self.session.caps:
             self.session.caps = self.chaos.squeeze(self.session.caps)
+        self._prepared_data = data
+        self._last_data = data
+        if self.adapt is not None and self.executor.plan.residuals:
+            plan = self.executor.plan
+            attrs = tuple(plan.query.join_attributes())
+            self.detector = DriftDetector(
+                self.session.cell_loads(), self.adapt, attrs=attrs,
+                hh_frac=self.adapt.hh_threshold_factor / plan.k,
+                known_hhs={a: plan.hhs.values(a) for a in attrs})
+            self._plan_cache[self._spec_key(self.executor)] = self.executor
         return self
 
     @property
     def stats(self) -> dict:
-        """Session fault counters plus the healing loop's own."""
-        return {**self.session.stats,
+        """Session fault counters plus the healing loop's own.
+
+        A re-plan retires the wrapped session; retired sessions' cumulative
+        counters are folded in here so the loop's history never resets from
+        the caller's point of view."""
+        s = {**self.session.stats}
+        if self._retired_stats is not None:
+            for key in ("batches", "retries", "escalations"):
+                s[key] += self._retired_stats[key]
+            s["shuffle_overflow"] = (s["shuffle_overflow"]
+                                     + self._retired_stats["shuffle_overflow"])
+            s["join_overflow"] = (s["join_overflow"]
+                                  + self._retired_stats["join_overflow"])
+        return {**s,
                 "evicted": list(self.evicted),
                 "refolds": self.refolds,
-                "refold_compiles": self.refold_compiles}
+                "refold_compiles": self.refold_compiles,
+                "replacements": self.replacements,
+                "replace_compiles": self.replace_compiles,
+                "replans": self.replans,
+                "replan_compiles": self.replan_compiles}
 
     def run_batch(self, chunks: Mapping[str, np.ndarray] | None = None
                   ) -> dict[str, np.ndarray]:
@@ -235,6 +306,10 @@ class SelfHealingSession:
             self.health.heartbeat(d)
         self._evict([d for d in self.watchdog.to_evict()
                      if d in self.alive])
+        if self.detector is not None:
+            self._last_data = (chunks if chunks is not None
+                               else self._prepared_data)
+            self._observe_and_adapt()
         return res
 
     def evict_device(self, device: int) -> None:
@@ -269,3 +344,191 @@ class SelfHealingSession:
         self.alive = survivors
         self.evicted.extend(sorted(devices))
         self.refolds += 1
+
+    # -- the adaptation axis (drift -> re-place -> re-plan) -------------------
+
+    def _join_columns(self, data: Mapping[str, np.ndarray]
+                      ) -> dict[str, dict[str, np.ndarray]]:
+        """Per join attribute, the raw column of EACH relation containing it
+        — one Misra-Gries stream per (attr, relation), matching the exact
+        detector's per-relation thresholds."""
+        q = self.executor.plan.query
+        return {a: {rel.name: np.asarray(data[rel.name])[:, rel.attrs.index(a)]
+                    for rel in q.relations if a in rel.attrs}
+                for a in self.detector.attrs}
+
+    def _observe_and_adapt(self) -> None:
+        """Feed the drift detector one executed batch and act on its verdict.
+
+        One extra scatter-free counting pass (`count_batch`) yields the
+        batch's per-cell loads; the raw join columns feed the HH sketches.
+        `assess` advances patience streaks, so this runs exactly once per
+        `run_batch`."""
+        det = self.detector
+        counts = self.session.count_batch()
+        if not counts:
+            return
+        self._last_counts = counts
+        loads = np.sum([c.sum(axis=0) for c in counts], axis=0)
+        det.observe_loads(loads)
+        if self._last_data is not None:
+            det.observe_values(self._join_columns(self._last_data))
+        action = det.assess()
+        if action == "replace":
+            self.force_replace()
+        elif action == "replan":
+            self.force_replan()
+
+    @staticmethod
+    def _refold_keep_warm(ses: ExecutorSession, placement,
+                          counts: list[np.ndarray] | None) -> None:
+        """Refold `ses` onto `placement`, preferring capacities that stay in
+        the already-compiled bucket: a cap only grows past its old value when
+        the raw worst (source, dest) routed count under the new placement
+        genuinely exceeds it — the refold's own re-derivation applies
+        capacity_factor headroom, which can push a cap one bucket up even
+        though the traffic never left the old one."""
+        ex = ses.executor
+        old_caps = dict(ses.caps)
+        ses.refold(placement, counts=counts)
+        if counts is None:
+            counts = ses._count_mats
+        if counts is not None:
+            plan, n_dev = ex.plan, ex.n_devices
+            fold = np.zeros((plan.k, n_dev), np.int64)
+            fold[np.arange(plan.k), placement.table] = 1
+            for rel, c in zip(plan.query.relations, counts):
+                raw = int((c @ fold).max())
+                if rel.name in old_caps and raw <= old_caps[rel.name]:
+                    ses.caps[rel.name] = old_caps[rel.name]
+                else:
+                    ses.caps[rel.name] = max(ses.caps[rel.name],
+                                             old_caps.get(rel.name, 0))
+        else:
+            ses.caps = {name: max(old_caps.get(name, c), c)
+                        for name, c in ses.caps.items()}
+
+    def force_replace(self) -> None:
+        """Re-run LPT on the OBSERVED cell loads and swap the traced
+        placement table — the mild-drift response.
+
+        Capacities are re-derived from the observed count matrices but never
+        shrink below the already-compiled ones, so a replacement on stable
+        structure stays in the warm capacity bucket (zero recompile — the
+        same discipline as the eviction re-fold)."""
+        ses, ex = self.session, self.executor
+        det = self.detector
+        loads = None
+        if det is not None:
+            loads = det.observed_cell_loads()
+            if not np.any(loads):
+                loads = None
+        if loads is None:
+            loads = ses.cell_loads()
+        placement = lpt_placement(
+            loads, ex.n_devices,
+            devices=self.alive if self.evicted else None)
+        had_run = ses._last_args is not None
+        self._refold_keep_warm(ses, placement, self._last_counts)
+        if had_run:
+            key = (ses._shapes,
+                   tuple(ses.caps[r.name] for r in ex.plan.query.relations),
+                   ses.cap_out)
+            if key not in ex._step_cache:
+                self.replace_compiles += 1
+        self.replacements += 1
+        if det is not None:
+            det.rebaseline(loads, action="replace")
+
+    def force_replan(self) -> None:
+        """Re-derive the residual plan from the sketched HH set and swap the
+        wrapped session — the threshold-drift / new-heavy-hitter response.
+
+        The last executed batch is the size sample; plans are cached by
+        route-spec signature, so a structurally unchanged re-plan reuses the
+        SAME executor (warm step cache) and the new session inherits the old
+        one's bucketed capacities — one prepare, zero compiles.  A genuinely
+        new plan builds a new executor and compiles on its next batch; that
+        shows up in `replan_compiles` (never hidden)."""
+        ses, ex = self.session, self.executor
+        det = self.detector
+        if det is None:
+            raise RuntimeError(
+                "force_replan needs adapt=AdaptPolicy(...) (no detector)")
+        sample = (self._last_data if self._last_data is not None
+                  else self._prepared_data)
+        if sample is None:
+            raise RuntimeError("force_replan before prepare()")
+        plan = ex.plan
+        new_plan = plan_from_hhs(plan.query, sample, plan.k,
+                                 det.sketched_hhs())
+        specs = {name: _route_specs(rs)
+                 for name, rs in _build_routes(new_plan).items()}
+        key = (new_plan.k, tuple(sorted(specs.items())))
+        ex2 = self._plan_cache.get(key)
+        if ex2 is None:
+            ex2 = ShardedJoinExecutor(new_plan, ex.mesh, ex.axis, ex.config)
+            self._plan_cache[key] = ex2
+        ses2 = ex2.session()
+        # Prepare on the ORIGINAL prepared data so the session shapes (the
+        # step-cache key's first component) match the old session's — chunks
+        # pad up to them exactly as before.  `sample` only sized the plan.
+        anchor = self._prepared_data if self._prepared_data is not None else sample
+        ses2.prepare(anchor, caps=dict(ses.caps) or None)
+        ses2.cap_out = ses.cap_out
+        # Re-place the new session for the traffic that triggered us.  With
+        # unchanged routing (plan-cache hit) the observed window lives in the
+        # same cell space, so the OBSERVED loads drive LPT — otherwise a warm
+        # re-plan would quietly reset the fold to the anchor data's and throw
+        # the adaptation away.  A structurally new plan redefines the cells;
+        # only the anchor's loads under the new routing are meaningful then.
+        obs_loads = det.observed_cell_loads()
+        if ex2 is ex and np.any(obs_loads):
+            self._refold_keep_warm(
+                ses2,
+                lpt_placement(obs_loads, ex2.n_devices,
+                              devices=self.alive if self.evicted else None),
+                self._last_counts)
+        elif self.evicted:
+            # Degraded mode survives the re-plan: fold the new plan's cells
+            # over the survivors only, keeping inherited caps warm.
+            self._refold_keep_warm(
+                ses2,
+                lpt_placement(ses2.cell_loads(), ex2.n_devices,
+                              devices=self.alive),
+                None)
+        if ses2._shapes is not None and ses2._shapes != ():
+            key2 = (ses2._shapes,
+                    tuple(ses2.caps[r.name]
+                          for r in ex2.plan.query.relations),
+                    ses2.cap_out)
+            if key2 not in ex2._step_cache:
+                self.replan_compiles += 1
+        # Retire the old session's counters so `stats` stays cumulative.
+        old = ses.stats
+        if self._retired_stats is None:
+            self._retired_stats = {
+                "batches": 0, "retries": 0, "escalations": 0,
+                "shuffle_overflow": np.zeros_like(old["shuffle_overflow"]),
+                "join_overflow": np.zeros_like(old["join_overflow"]),
+            }
+        for k_ in ("batches", "retries", "escalations"):
+            self._retired_stats[k_] += old[k_]
+        self._retired_stats["shuffle_overflow"] += old["shuffle_overflow"]
+        self._retired_stats["join_overflow"] += old["join_overflow"]
+        warm_hit = ex2 is ex
+        self.session, self.executor = ses2, ex2
+        self._last_counts = None        # old plan's routing, now meaningless
+        self.replans += 1
+        # New baseline: when the plan's routing is unchanged (cache hit) the
+        # observed window is still expressed in the right cell space and IS
+        # the best estimate of current traffic — rebaselining to the anchor
+        # data's loads instead would leave the detector permanently drifted
+        # against a stream that has genuinely shifted (replan thrash).  A
+        # structurally new plan redefines the cells, so only the anchor's
+        # loads under the NEW routing are meaningful.
+        obs = det.observed_cell_loads()
+        base = obs if warm_hit and np.any(obs) else ses2.cell_loads()
+        det.rebaseline(
+            base, action="replan",
+            known_hhs={a: new_plan.hhs.values(a) for a in det.attrs})
