@@ -34,6 +34,10 @@ Tables:
                       zero recompile), step drift -> sketch-driven warm
                       re-plan; adaptive vs static makespan post-shift must
                       improve and stay bit-exact; emits BENCH_adapt.json
+  shuffle_overlap     chunked map<->all_to_all pipeline: the SAME plan runs
+                      serial (C=1) and overlapped (C in {2,4}); warm batch
+                      latency, bit-exactness vs reference_join, zero warm
+                      recompiles across chunk counts; emits BENCH_overlap.json
   kernel_throughput   hash_partition / match_counts / segment_histogram
   planner_latency     plan_skew_join wall time vs #HH (control-plane budget)
 """
@@ -909,6 +913,107 @@ def bench_adapt_scaling():
     row("adapt_scaling/json", 0.0, f"path={out_path}")
 
 
+def bench_shuffle_overlap():
+    """Chunked map<->all_to_all pipeline vs the serial one-shot shuffle.
+
+    The SAME skewed plan executes with `overlap_shuffle` C = 1 (serial
+    oracle: pack everything, one all_to_all per relation) and C in {2, 4}
+    (the tile pipeline: per-chunk caps are the serial cap ceil-divided by C,
+    so total shuffle-buffer rows stay ~constant, and pack(tile i+1) has no
+    data dependency on all_to_all(tile i), so a parallel runtime overlaps
+    them).  All C sessions stay live and the timing loop INTERLEAVES them —
+    one batch each per round, per-C minimum over the rounds — so container
+    load drift hits every chunk count equally.  Per (m, k) point and C:
+    warm `run_batch` latency blocked on the device-resident output buffer,
+    bit-exactness vs `reference_join`, overflow counts, and `compile_count`
+    growth across the warm rounds (C is baked into the step recipe — warm
+    batches must compile NOTHING).
+
+    Honest-measurement note: this container exposes ONE physical core
+    (`cores` in the artifact), so there is no parallelism for the pipeline
+    to exploit — pack and exchange serialize either way, and the expected
+    result is latency-NEUTRAL (the ~1-3% chunk dispatch/concat overhead
+    disappears into join-phase noise).  The gate therefore requires the
+    overlapped path to stay within OVERLAP_TOL of serial at the largest
+    swept size (enabling the pipeline must be free), not to beat it; the
+    overlap's wall-clock win needs a multi-core host (XLA:CPU thunk
+    executor) or a real TPU interconnect.  Emits BENCH_overlap.json."""
+    import jax
+    if len(jax.devices()) < 8:
+        row("shuffle_overlap/skipped", 0.0, "needs 8 devices")
+        return
+    from repro.core import canonical, plan_skew_join, reference_join, two_way
+    from repro.core.executor import ExecutorConfig, ShardedJoinExecutor
+    from repro.data import skewed_join_dataset
+    from repro.launch.mesh import make_mesh_compat
+
+    n_dev = 8
+    mesh = make_mesh_compat((n_dev,), ("cells",))
+    q = two_way()
+    chunk_counts = (1, 2, 4)
+    report = {"n_devices": n_dev, "cores": os.cpu_count(),
+              "chunk_counts": list(chunk_counts), "rounds": 7, "sweep": []}
+
+    for m, k in ((1 << 16, 32), (1 << 17, 64)):
+        data = skewed_join_dataset(q, m, m, skew={"B": 0.5}, seed=13)
+        plan = plan_skew_join(q, data, k)
+        expect = reference_join(q, data)
+        cap_out = 1 << max(int(np.ceil(np.log2(max(len(expect), 1) * 1.5))),
+                           14)
+        entry = {"m": m, "k": k, "ref_rows": len(expect), "chunks": []}
+        sessions, builds_cold = {}, {}
+        for C in chunk_counts:
+            ex = ShardedJoinExecutor(plan, mesh, config=ExecutorConfig(
+                out_capacity=cap_out, overlap_shuffle=C))
+            session = ex.session().prepare(data)
+            session.run_batch()                     # compile
+            sessions[C] = (ex, session)
+            builds_cold[C] = ex.compile_count
+        best = {C: float("inf") for C in chunk_counts}
+        for _ in range(report["rounds"]):
+            for C, (_ex, session) in sessions.items():
+                # Block on the device-resident output buffer, NOT a host
+                # transfer — the (n_dev, cap_out, w) copy-out would swamp
+                # the shuffle-phase difference this table measures.
+                t0 = time.perf_counter()
+                jax.block_until_ready(session.run_batch()._out)
+                best[C] = min(best[C], time.perf_counter() - t0)
+        for C, (ex, session) in sessions.items():
+            res = session.run_batch()
+            got = res["rows"][res["valid"]]
+            exact = (len(got) == len(expect)
+                     and bool((canonical(got) == expect).all()))
+            c_entry = {
+                "C": C, "warm_us": best[C] * 1e6, "exact": exact,
+                "shuffle_overflow": int(res["shuffle_overflow"].sum()),
+                "join_overflow": int(res["join_overflow"].sum()),
+                "warm_builds": ex.compile_count - builds_cold[C],
+                "step_builds": ex.compile_count,
+            }
+            entry["chunks"].append(c_entry)
+            row(f"shuffle_overlap/m={m}/k={k}/C={C}", c_entry["warm_us"],
+                f"exact={exact};"
+                f"shuffle_overflow={c_entry['shuffle_overflow']};"
+                f"join_overflow={c_entry['join_overflow']};"
+                f"warm_builds={c_entry['warm_builds']}")
+        serial_us = entry["chunks"][0]["warm_us"]
+        best_c = min(entry["chunks"][1:], key=lambda e: e["warm_us"])
+        entry["serial_us"] = serial_us
+        entry["best_overlap_us"] = best_c["warm_us"]
+        entry["best_C"] = best_c["C"]
+        entry["overlap_vs_serial"] = best_c["warm_us"] / max(serial_us, 1e-9)
+        report["sweep"].append(entry)
+        row(f"shuffle_overlap/m={m}/k={k}/best", best_c["warm_us"],
+            f"serial_us={serial_us:.1f};best_C={best_c['C']};"
+            f"overlap_vs_serial={entry['overlap_vs_serial']:.3f}")
+
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_overlap.json")
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    row("shuffle_overlap/json", 0.0, f"path={out_path}")
+
+
 def bench_kernel_throughput():
     """Kernel wrappers (jit'd ref path on CPU; Pallas compiles on TPU)."""
     import jax
@@ -961,6 +1066,7 @@ def main() -> None:
     bench_reduce_v2()
     bench_recover_scaling()
     bench_adapt_scaling()
+    bench_shuffle_overlap()
     bench_kernel_throughput()
     bench_planner_latency()
     print(f"# {len(ROWS)} rows")

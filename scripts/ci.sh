@@ -14,8 +14,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_bench.py
 # recompile-on-retry) or adaptation (static beats adaptive / warm re-plan
 # recompiled) regressions; the artifacts must exist afterwards.
 test -f BENCH_shuffle.json -a -f BENCH_fold.json -a -f BENCH_map.json \
-     -a -f BENCH_reduce.json -a -f BENCH_recover.json -a -f BENCH_adapt.json
+     -a -f BENCH_reduce.json -a -f BENCH_recover.json -a -f BENCH_adapt.json \
+     -a -f BENCH_overlap.json
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_recompile.py
+# Structural lowering guard: the scatter-assemble map phase and the one-hot
+# reduce expansion must lower with ZERO XLA gather ops (and the counter's
+# teeth must still bite on the superseded gather paths).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_hlo.py
 
 # The documented entry points must not rot: each example asserts its own
 # exactness (quickstart runs a k=256 plan folded onto 8 devices; the demo a

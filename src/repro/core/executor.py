@@ -6,20 +6,28 @@ physical-device fold, capacity derivation, session caching — lives in
 docs/architecture.md; this docstring keeps only the invariants the code
 relies on.
 
-  map     the Pallas `map_pack` megakernel: route (all residual routes,
-          fused multiply-shift hashes), placement fold, and the radix
-          shuffle pack in ONE streaming pass per relation — the routed
-          (n·F, w+1) expansion is never materialized.  The staged
+  map     the Pallas `scatter_pack` megakernel: route (all residual routes,
+          fused multiply-shift hashes), placement fold, radix rank, and the
+          in-kernel scatter assembly in ONE streaming pass per relation —
+          the routed (n·F, w+1) expansion is never materialized and the
+          shuffle buffer is written with zero XLA gathers.  The staged
           `_route_relation` -> `_fold_dests` -> `_pack_buckets` composition
           survives (fuse_map=False / use_kernels=False) as the bit-exactness
           oracle.
   shuffle the megakernel's (n_devices, cap, w+1) fixed-capacity buffer per
-          relation goes through one `all_to_all`.
+          relation goes through one `all_to_all` — or, with
+          `overlap_shuffle = C ≥ 2`, through C chunked all_to_alls
+          interleaved with the next chunk's pack (each chunk's send buffer
+          is final the moment its tiles are packed — the paper's one-round
+          structure is what makes the overlap legal; the serial path stays
+          the bit-exactness oracle up to fragment arrival order).
   reduce  `_local_join`: radix hash-join cascade (the `join_probe` kernel
           family — fused key hash, carried-histogram build, key-verified
-          chained probe), matching only within equal logical cell ids.  The
-          sort-merge formulation survives (hash_reduce=False) as the
-          mid-fidelity oracle, the dense match matrix as the ground oracle.
+          chained probe), matching only within equal logical cell ids, with
+          the prefix-sum expansion running gather-free through
+          `kernels.scatter_pack.expand_rows`.  The sort-merge formulation
+          survives (hash_reduce=False) as the mid-fidelity oracle, the
+          dense match matrix as the ground oracle.
 
 Invariants:
   * Logical cells of every residual join live in one flat id space
@@ -43,6 +51,7 @@ Sessions (`ExecutorSession.prepare`/`run_batch`) upload once and stream warm;
 """
 from __future__ import annotations
 
+import collections.abc
 import warnings
 from dataclasses import dataclass
 from typing import Mapping
@@ -55,8 +64,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..kernels import ops as kops
 from ..kernels.join_probe import default_bits, probe_tables
 from ..kernels.map_pack import count_scatter
-from ..kernels.ref import (bucket_pack_ref, build_table_ref, fold_cells_ref,
-                           join_hash_ref, run_lengths_ref, segment_scan_ref)
+from ..kernels.ref import (bucket_pack_ref, build_table_ref, expand_rows_ref,
+                           fold_cells_ref, join_hash_ref, run_lengths_ref,
+                           segment_scan_ref)
 from ..launch.mesh import shard_map_compat
 from .hypercube import hash_seed
 from .placement import (CellPlacement, check_fold, modulo_placement,
@@ -194,6 +204,13 @@ class ExecutorConfig:
                                        # retries + similar chunks on warm
                                        # executables (explicit caps= are
                                        # respected verbatim)
+    overlap_shuffle: int = 0           # C ≥ 2: split each relation's map
+                                       # pass into C tiles and interleave
+                                       # pack(i+1) with all_to_all(i) on
+                                       # per-chunk send buffers (caps are
+                                       # per chunk; remainder tiles pad to
+                                       # the warm shapes).  ≤ 1: the serial
+                                       # map -> one all_to_all oracle path
 
 
 @dataclass(frozen=True)
@@ -529,10 +546,13 @@ def _local_join(frags: dict[str, jnp.ndarray], query: JoinQuery, cap_out: int,
          right-side permutation whose groups are contiguous and internally in
          ARRIVAL order — `_probe_hash` (the `join_probe` radix hash-join
          kernels, default) or `_probe_sort` (the retained sort-merge oracle);
-      2. expand to the static `cap_out` shape by gathering from the exclusive
-         prefix sum of per-left-row counts — output order is (left row, right
-         arrival order), bit-identical across BOTH probes and the
-         dense-matrix ground oracle.
+      2. expand to the static `cap_out` shape from the exclusive prefix sum
+         of per-left-row counts — `kernels.scatter_pack.expand_rows` (the
+         gather-free one-hot-contraction kernel / its host twin; the ref
+         oracle on use_kernels=False), output order (left row, right arrival
+         order), bit-identical across BOTH probes and the dense-matrix
+         ground oracle.  Output columns are carved out of the expanded
+         (left ++ right) rows with STATIC slices — no column gather.
 
     Returns (rows (cap_out, n_attrs), valid (cap_out,), overflow ())."""
     rels = list(query.relations)
@@ -546,7 +566,6 @@ def _local_join(frags: dict[str, jnp.ndarray], query: JoinQuery, cap_out: int,
         r_valid = right[:, -1] != INVALID
         shared = [(acc_attrs.index(a), right_attrs.index(a))
                   for a in right_attrs if a in acc_attrs]   # incl. __cell__
-        n_l, n_r = acc.shape[0], right.shape[0]
         lk = acc[:, jnp.asarray([l for l, _ in shared])]
         rk = right[:, jnp.asarray([r for _, r in shared])]
         if hash_reduce:
@@ -557,18 +576,20 @@ def _local_join(frags: dict[str, jnp.ndarray], query: JoinQuery, cap_out: int,
                                            use_kernels)
         n_match = counts.sum()
         overflow = overflow + jnp.maximum(0, n_match - cap_out)
-        off = jnp.cumsum(counts) - counts          # exclusive prefix sum
-        t = jnp.arange(cap_out, dtype=jnp.int32)
-        li = jnp.clip(jnp.searchsorted(off, t, side="right") - 1, 0, n_l - 1)
-        ri = perm[jnp.clip(lo[li] + t - off[li], 0, n_r - 1)]
-        valid_out = t < n_match
+        if use_kernels:
+            exp, valid_out = kops.expand_rows(acc, right, counts, lo, perm,
+                                              cap_out)
+        else:
+            exp, valid_out = expand_rows_ref(acc, right, counts, lo, perm,
+                                             cap_out)
+        wa = acc.shape[1]
         extra_names = [a for a in rel.attrs if a not in acc_attrs]
         extra_cols = [right_attrs.index(a) for a in extra_names]
-        # Column layout: acc named attrs, new named attrs, __cell__ last.
-        pieces = [acc[li][:, :-1]]
-        if extra_cols:
-            pieces.append(right[ri][:, jnp.asarray(extra_cols)])
-        pieces.append(acc[li][:, -1:])             # the (equal) cell id
+        # Column layout: acc named attrs, new named attrs, __cell__ last —
+        # static slices of the expanded (acc ++ right) rows.
+        pieces = [exp[:, :wa - 1]]
+        pieces.extend(exp[:, wa + c:wa + c + 1] for c in extra_cols)
+        pieces.append(exp[:, wa - 1:wa])           # the (equal) cell id
         new_rows = jnp.concatenate(pieces, axis=1)
         acc_valid = valid_out
         acc = jnp.where(acc_valid[:, None], new_rows, INVALID)
@@ -723,28 +744,65 @@ class ShardedJoinExecutor:
 
         specs, k = self.route_specs, self.plan.k
 
+        C = max(int(cfg.overlap_shuffle), 1)
+
         def step(ptable, *arrs):
             local = {r.name: a for r, a in zip(query.relations, arrs)}
             frags, overs = {}, []
             recv_count = jnp.int32(0)
-            for rel in query.relations:
+
+            def pack_one(rows_in, rel_name):
                 if cfg.use_kernels and cfg.fuse_map:
-                    # Megakernel: route -> fold -> pack, one streaming pass.
-                    buf, over = kops.map_pack(local[rel.name],
-                                              specs[rel.name], ptable, k,
-                                              n_dev, caps[rel.name])
+                    # Megakernel: route -> fold -> scatter assemble, one
+                    # streaming pass writing the send buffer directly.
+                    return kops.scatter_pack(rows_in, specs[rel_name], ptable,
+                                             k, n_dev, caps[rel_name])
+                # Staged oracle path (and the pure-jnp ref path).
+                dest, rows = _route_relation(rows_in, routes[rel_name],
+                                             cfg.use_kernels)
+                phys = _fold_dests(dest, ptable, cfg.use_kernels)
+                return _pack_buckets(phys, rows, n_dev, caps[rel_name],
+                                     cfg.use_kernels)
+
+            for rel in query.relations:
+                rows_loc = local[rel.name]
+                if C <= 1:
+                    buf, over = pack_one(rows_loc, rel.name)
+                    recv = jax.lax.all_to_all(buf, self.axis, split_axis=0,
+                                              concat_axis=0, tiled=True)
+                    frag = recv.reshape(-1, recv.shape[-1])
                 else:
-                    # Staged oracle path (and the pure-jnp ref path).
-                    dest, rows = _route_relation(local[rel.name],
-                                                 routes[rel.name],
-                                                 cfg.use_kernels)
-                    phys = _fold_dests(dest, ptable, cfg.use_kernels)
-                    buf, over = _pack_buckets(phys, rows, n_dev,
-                                              caps[rel.name], cfg.use_kernels)
+                    # Chunked overlap: C tile-sized packs, each followed by
+                    # its own all_to_all.  pack(i+1) has no data dependency
+                    # on all_to_all(i), so the runtime overlaps the next
+                    # chunk's pack with the in-flight exchange (each chunk's
+                    # send buffer is final the moment its tiles are packed —
+                    # the one-round structure makes the pipeline legal).
+                    # The last tile is padded with INVALID rows up to the
+                    # uniform tile shape, so every chunk shares one compiled
+                    # pack signature.
+                    n_loc = rows_loc.shape[0]
+                    tile = -(-n_loc // C)
+                    pad = C * tile - n_loc
+                    if pad:
+                        rows_loc = jnp.concatenate(
+                            [rows_loc,
+                             jnp.full((pad, rows_loc.shape[1]), INVALID,
+                                      rows_loc.dtype)], axis=0)
+                    parts, chunk_overs = [], []
+                    for ci in range(C):
+                        cbuf, cover = pack_one(
+                            jax.lax.slice_in_dim(rows_loc, ci * tile,
+                                                 (ci + 1) * tile, axis=0),
+                            rel.name)
+                        recv = jax.lax.all_to_all(cbuf, self.axis,
+                                                  split_axis=0, concat_axis=0,
+                                                  tiled=True)
+                        parts.append(recv.reshape(-1, recv.shape[-1]))
+                        chunk_overs.append(cover)
+                    over = jnp.stack(chunk_overs).sum()
+                    frag = jnp.concatenate(parts, axis=0)
                 overs.append(over)
-                recv = jax.lax.all_to_all(buf, self.axis, split_axis=0,
-                                          concat_axis=0, tiled=True)
-                frag = recv.reshape(-1, recv.shape[-1])
                 recv_count = recv_count + (frag[:, -1] != INVALID).sum()
                 frags[rel.name] = frag
             # Per-relation overflow vector: the per-(device, phase, relation)
@@ -785,6 +843,52 @@ class ShardedJoinExecutor:
             raise CapacityOverflowError.from_result(
                 res, tuple(r.name for r in self.plan.query.relations))
         return res["rows"][res["valid"]]
+
+
+class BatchResult(collections.abc.Mapping):
+    """Lazily-materialized result of one `run_batch`.
+
+    A read-only Mapping with the six keys `run_batch` has always returned
+    ('rows', 'valid', 'shuffle_overflow', 'shuffle_overflow_by_rel',
+    'join_overflow', 'recv_counts').  Each value is fetched from device and
+    converted on FIRST access, then cached — a warm streaming loop that
+    never reads a key never pays its device->host transfer, so back-to-back
+    `run_batch` calls stay fully asynchronous (no host block between
+    dispatches).  Reading any key still yields exactly what the old eager
+    dict held, bit for bit."""
+
+    _KEYS = ("rows", "valid", "shuffle_overflow", "shuffle_overflow_by_rel",
+             "join_overflow", "recv_counts")
+
+    def __init__(self, out, valid, sh_over, j_over, recv):
+        self._out, self._valid = out, valid
+        self._sh_over, self._j_over, self._recv = sh_over, j_over, recv
+        self._cache: dict = {}
+
+    def __getitem__(self, key):
+        if key not in self._KEYS:
+            raise KeyError(key)
+        if key not in self._cache:
+            if key == "rows":
+                self._cache[key] = np.asarray(self._out).reshape(
+                    -1, self._out.shape[-1])
+            elif key == "valid":
+                self._cache[key] = np.asarray(self._valid).reshape(-1)
+            elif key == "shuffle_overflow_by_rel":
+                self._cache[key] = np.asarray(self._sh_over, np.int64)
+            elif key == "shuffle_overflow":
+                self._cache[key] = self["shuffle_overflow_by_rel"].sum(axis=1)
+            elif key == "join_overflow":
+                self._cache[key] = np.asarray(self._j_over, np.int64)
+            else:   # recv_counts
+                self._cache[key] = np.asarray(self._recv)
+        return self._cache[key]
+
+    def __iter__(self):
+        return iter(self._KEYS)
+
+    def __len__(self):
+        return len(self._KEYS)
 
 
 class ExecutorSession:
@@ -831,8 +935,12 @@ class ExecutorSession:
         # Cumulative fault counters over the SESSION lifetime: every attempt
         # of every chunk is counted exactly once, so retried chunks keep the
         # overflow their failed attempts saw (the delivered result's own
-        # counters are zero after a successful retry).
-        self.stats: dict = {
+        # counters are zero after a successful retry).  The overflow arrays
+        # accumulate LAZILY: run_batch parks each batch's (tiny) device-side
+        # overflow vectors in `_pending` and the `stats` property drains them
+        # on access — a warm streaming loop never blocks on device->host
+        # sync just to keep counters current.
+        self._stats: dict = {
             "batches": 0,               # run_batch calls (attempts included)
             "retries": 0,               # re-runs forced by overflow
             "escalations": 0,           # capacity bumps applied by retries
@@ -840,6 +948,25 @@ class ExecutorSession:
                                          np.int64),
             "join_overflow": np.zeros(executor.n_devices, np.int64),
         }
+        self._pending: list[tuple] = []     # undrained (sh_over, j_over)
+
+    # Bound on undrained per-batch overflow vectors before run_batch folds
+    # them in itself (each is two small device arrays; the bound keeps an
+    # unread streaming session from pinning thousands of buffers).
+    _PENDING_MAX = 64
+
+    def _drain_stats(self) -> None:
+        pending, self._pending = self._pending, []
+        for sh_over, j_over in pending:
+            self._stats["shuffle_overflow"] += np.asarray(sh_over, np.int64)
+            self._stats["join_overflow"] += np.asarray(j_over, np.int64)
+
+    @property
+    def stats(self) -> dict:
+        """Session-lifetime fault counters (see __init__); draining any
+        pending per-batch overflow vectors on access."""
+        self._drain_stats()
+        return self._stats
 
     def prepare(self, data: Mapping[str, np.ndarray],
                 caps: Mapping[str, int] | None = None,
@@ -917,17 +1044,27 @@ class ExecutorSession:
                      placement: CellPlacement) -> dict[str, int]:
         """Bucketed shuffle capacities: worst per-(source, destination
         device) routed-copy count after folding the count matrices through
-        `placement`, times `capacity_factor`, quantized to the cap grid."""
+        `placement`, times `capacity_factor`, quantized to the cap grid.
+
+        With `overlap_shuffle = C ≥ 2` capacities are PER CHUNK: the serial
+        quantized cap ceil-divided by C, so the C chunked send buffers hold
+        the same total rows (and the reduce sees the same fragment shape) as
+        the serial buffer would — the slack factor, not the chunking, is
+        what absorbs per-chunk imbalance."""
         ex = self.executor
         plan, n_dev = ex.plan, ex.n_devices
         factor = ex.config.capacity_factor
+        C = max(int(ex.config.overlap_shuffle), 1)
         # Fold logical columns onto devices: worst (source, dest) count.
         fold = np.zeros((plan.k, n_dev), np.int64)
         fold[np.arange(plan.k), placement.table] = 1
-        return {r.name: quantize_capacity(
-                    int(np.ceil(max(int((c @ fold).max()), 1) * factor)),
-                    ex.config.cap_bucket)
-                for r, c in zip(plan.query.relations, counts)}
+        caps = {}
+        for r, c in zip(plan.query.relations, counts):
+            serial = quantize_capacity(
+                int(np.ceil(max(int((c @ fold).max()), 1) * factor)),
+                ex.config.cap_bucket)
+            caps[r.name] = -(-serial // C) if C > 1 else serial
+        return caps
 
     def cell_loads(self) -> np.ndarray:
         """Per-logical-cell routed-copy loads (k,) from the prepare-time
@@ -979,7 +1116,11 @@ class ExecutorSession:
 
         `chunks=None` re-runs the prepared relations; otherwise `chunks` maps
         every relation to a fresh tuple array (a streamed batch), padded up to
-        the session shapes when smaller so the cached executable is reused."""
+        the session shapes when smaller so the cached executable is reused.
+        Returns a `BatchResult` — a Mapping with the usual six keys whose
+        values materialize on first access, so the call itself never blocks
+        on a device->host transfer (per-batch overflow vectors are folded
+        into `session.stats` lazily too, on stats access)."""
         if self._shapes is None:
             raise RuntimeError("ExecutorSession.run_batch before prepare()")
         ex = self.executor
@@ -987,7 +1128,7 @@ class ExecutorSession:
         n_dev, n_rel = ex.n_devices, len(query.relations)
         if not plan.residuals:
             w = len(query.attributes)
-            self.stats["batches"] += 1
+            self._stats["batches"] += 1
             return {"rows": np.zeros((0, w), np.int32),
                     "valid": np.zeros((0,), bool),
                     "shuffle_overflow": np.zeros(n_dev, np.int64),
@@ -1023,19 +1164,11 @@ class ExecutorSession:
                 UserWarning, stacklevel=2)
         f = ex._compiled_step(shapes, self.caps, self.cap_out)
         out, valid, sh_over, j_over, recv = f(self._ptable_dev, *args)
-        sh_by_rel = np.asarray(sh_over, np.int64)       # (n_dev, n_rel)
-        j_arr = np.asarray(j_over, np.int64)
-        self.stats["batches"] += 1
-        self.stats["shuffle_overflow"] += sh_by_rel
-        self.stats["join_overflow"] += j_arr
-        return {
-            "rows": np.asarray(out).reshape(-1, out.shape[-1]),
-            "valid": np.asarray(valid).reshape(-1),
-            "shuffle_overflow": sh_by_rel.sum(axis=1),
-            "shuffle_overflow_by_rel": sh_by_rel,
-            "join_overflow": j_arr,
-            "recv_counts": np.asarray(recv),
-        }
+        self._stats["batches"] += 1
+        self._pending.append((sh_over, j_over))
+        if len(self._pending) >= self._PENDING_MAX:
+            self._drain_stats()
+        return BatchResult(out, valid, sh_over, j_over, recv)
 
     def run_with_retry(self, chunks: Mapping[str, np.ndarray] | None = None,
                        policy: RetryPolicy | None = None

@@ -9,7 +9,11 @@ TPU mapping: keys stream HBM -> VMEM in (8, 128)-aligned tiles; the histogram
 is a VMEM accumulator revisited by every grid step (TPU grids are sequential,
 so read-modify-write accumulation across steps is safe).  Bucket comparison is
 a (block, nbuckets) one-hot on the VPU — nbuckets ≤ 2^14 keeps the one-hot tile
-within VMEM.
+within VMEM.  Past that, `hash_partition` switches to the multi-pass kernel:
+the bucket id splits into high/low halves and the histogram becomes the
+FACTORED (2^hi, 2^lo) table accumulated by one oh_hiᵀ @ oh_lo MXU dot per
+tile — O(block · 2^(bits/2)) VMEM, lifting the per-pass bucket cap (the same
+recursion-on-high-bits trick as `join_probe._build_table_multi_kernel`).
 """
 from __future__ import annotations
 
@@ -23,6 +27,9 @@ from .ref import MULT
 
 # Rows per grid step; lane-aligned (8 sublanes × 128 lanes).
 DEFAULT_BLOCK = 1024
+# Largest bucket count the single-pass (block, nbuckets) one-hot keeps in
+# VMEM at the default tile; beyond it the factored multi-pass kernel runs.
+MAX_ONEHOT_BUCKETS = 1 << 14
 
 
 def _hash_partition_kernel(keys_ref, ids_ref, hist_ref, *, seed: int,
@@ -47,6 +54,38 @@ def _hash_partition_kernel(keys_ref, ids_ref, hist_ref, *, seed: int,
     hist_ref[...] += partial
 
 
+def _hash_partition_multi_kernel(keys_ref, ids_ref, hist_ref, *, seed: int,
+                                 nbuckets: int, shift: int, lo_bits: int):
+    """Factored-histogram variant for nbuckets > MAX_ONEHOT_BUCKETS: ids are
+    computed exactly as the single-pass kernel, the histogram accumulates as
+    the (nbuckets >> lo_bits, 2^lo_bits) two-level table via one
+    oh_hiᵀ @ oh_lo dot — bucket id hi·2^lo_bits + lo is the row-major index,
+    so the caller's reshape recovers the flat histogram bit for bit."""
+    keys = keys_ref[...]                              # (block,)
+    h = (keys.astype(jnp.uint32) * jnp.uint32(seed)) * jnp.uint32(MULT)
+    ids = (h >> jnp.uint32(shift)).astype(jnp.int32)
+    ids_ref[...] = ids
+
+    n = keys.shape[0]
+    nh = nbuckets >> lo_bits
+    nl = 1 << lo_bits
+    hi = ids >> lo_bits
+    lo = ids & (nl - 1)
+    oh_hi = (hi[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (n, nh), 1)).astype(jnp.int32)
+    oh_lo = (lo[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (n, nl), 1)).astype(jnp.int32)
+    partial = jax.lax.dot_general(
+        oh_hi, oh_lo, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)             # (nh, nl)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += partial
+
+
 @functools.partial(jax.jit, static_argnames=("seed", "nbuckets", "block", "interpret"))
 def hash_partition(keys: jnp.ndarray, *, seed: int, nbuckets: int,
                    block: int = DEFAULT_BLOCK, interpret: bool = False
@@ -55,6 +94,8 @@ def hash_partition(keys: jnp.ndarray, *, seed: int, nbuckets: int,
 
     n is padded to a multiple of `block` internally; pad keys hash to some
     bucket but are excluded from the histogram by masking them to bucket -1.
+    nbuckets beyond `MAX_ONEHOT_BUCKETS` dispatches the factored multi-pass
+    kernel (bit-identical outputs, no per-pass bucket cap).
     """
     if nbuckets & (nbuckets - 1):
         raise ValueError(f"nbuckets={nbuckets} must be a power of two")
@@ -62,24 +103,39 @@ def hash_partition(keys: jnp.ndarray, *, seed: int, nbuckets: int,
     n_pad = -n % block
     keys_p = jnp.pad(keys, (0, n_pad), constant_values=0)
     shift = 32 - max(nbuckets.bit_length() - 1, 1)
+    multi = nbuckets > MAX_ONEHOT_BUCKETS
+    if multi:
+        lo_bits = (nbuckets.bit_length() - 1) // 2
+        nh, nl = nbuckets >> lo_bits, 1 << lo_bits
+        kernel = functools.partial(_hash_partition_multi_kernel, seed=seed,
+                                   nbuckets=nbuckets, shift=shift,
+                                   lo_bits=lo_bits)
+        hist_spec = pl.BlockSpec((nh, nl), lambda i: (0, 0))
+        hist_shape = jax.ShapeDtypeStruct((nh, nl), jnp.int32)
+    else:
+        kernel = functools.partial(_hash_partition_kernel, seed=seed,
+                                   nbuckets=nbuckets, shift=shift)
+        hist_spec = pl.BlockSpec((nbuckets,), lambda i: (0,))
+        hist_shape = jax.ShapeDtypeStruct((nbuckets,), jnp.int32)
 
     grid = (keys_p.shape[0] // block,)
     ids, hist = pl.pallas_call(
-        functools.partial(_hash_partition_kernel, seed=seed,
-                          nbuckets=nbuckets, shift=shift),
+        kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
         out_specs=[
             pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((nbuckets,), lambda i: (0,)),   # same block every step
+            hist_spec,                               # same block every step
         ],
         out_shape=[
             jax.ShapeDtypeStruct((keys_p.shape[0],), jnp.int32),
-            jax.ShapeDtypeStruct((nbuckets,), jnp.int32),
+            hist_shape,
         ],
         interpret=interpret,
     )(keys_p)
     ids = ids[:n]
+    if multi:
+        hist = hist.reshape(nbuckets)
     if n_pad:
         # Padded keys are 0 and hash(0) = 0 -> they all land in bucket 0;
         # subtract their histogram contribution.

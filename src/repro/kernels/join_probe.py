@@ -59,6 +59,11 @@ from .ref import MULT
 
 DEFAULT_BLOCK = 256       # rows per tile; auto-shrunk so (block, P+1) fits VMEM
 MAX_BITS = 16             # default table-size cap (2^16 buckets)
+# Largest n_bits the single-pass (block, P+1) one-hot handles at a healthy
+# tile size; beyond it `build_table` recurses on the high hash bits (the
+# factored two-level histogram of `_build_table_multi_kernel`), keeping
+# O(block · 2^(bits/2)) VMEM at full tiles instead of shrinking the tile.
+SINGLE_PASS_BITS = 10
 INVALID = -1
 
 # Per-column odd multipliers of the fused key hash (kernel, host twin, and
@@ -94,6 +99,13 @@ def _hash_block(keys: jnp.ndarray, n_bits: int) -> jnp.ndarray:
 def _auto_block(block: int, n_bits: int) -> int:
     """Shrink the tile so the (block, P+1) one-hot stays within ~4 MiB."""
     return max(8, min(block, (1 << 20) // ((1 << n_bits) + 1)))
+
+
+def _auto_block_multi(block: int, n_bits: int, lo_bits: int) -> int:
+    """Tile budget of the factored build: two one-hots of 2^(bits/2) width."""
+    nh = (1 << (n_bits - lo_bits)) + 1
+    nl = 1 << lo_bits
+    return max(8, min(block, (1 << 20) // (nh + nl)))
 
 
 # ---------------------------------------------------------------------------
@@ -134,6 +146,51 @@ def _build_table_kernel(keys_ref, valid_ref, bkt_ref, rank_ref, hist_ref, *,
     hist_ref[...] = carry + oh.sum(axis=0)
 
 
+def _build_table_multi_kernel(keys_ref, valid_ref, bkt_ref, rank_ref,
+                              hist_ref, *, n_bits: int, lo_bits: int,
+                              block: int):
+    """The multi-pass (recursion-on-high-bits) build: bucket d splits into
+    hi = d >> lo_bits and lo = d & (2^lo_bits - 1), and the carried histogram
+    becomes the FACTORED (2^hi_bits + 1, 2^lo_bits) table C — carry lookup is
+    a (block, nh+1) @ C dot masked by the lo one-hot, accumulation is the
+    rank-1 update oh_hiᵀ @ oh_lo, both MXU dots.  VMEM per tile drops from
+    O(block · 2^bits) to O(block · 2^(bits/2)), lifting the ~2^14-bucket
+    single-pass cap.  The sentinel bucket P = 2^bits maps to the unique cell
+    (hi = 2^hi_bits, lo = 0) no valid row can reach, so ranks and histogram
+    stay bit-identical to the single-pass kernel."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    keys = keys_ref[...]                                    # (block, w)
+    v = valid_ref[...]                                      # (block,) int32
+    nh = 1 << (n_bits - lo_bits)
+    nl = 1 << lo_bits
+    d = jnp.where(v > 0, _hash_block(keys, n_bits), jnp.int32(1 << n_bits))
+    hi = d >> lo_bits                                       # sentinel -> nh
+    lo = d & (nl - 1)                                       # sentinel -> 0
+    C = hist_ref[...]                                       # (nh + 1, nl)
+    oh_hi = (hi[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block, nh + 1), 1)).astype(jnp.int32)
+    oh_lo = (lo[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block, nl), 1)).astype(jnp.int32)
+    tmp = jax.lax.dot_general(
+        oh_hi, C, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)                   # C[hi, :]
+    base = (tmp * oh_lo).sum(axis=1)                        # C[hi, lo]
+    eq = d[:, None] == d[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    local = (eq & (col < row)).astype(jnp.int32).sum(axis=1)
+    bkt_ref[...] = d
+    rank_ref[...] = base + local
+    hist_ref[...] = C + jax.lax.dot_general(
+        oh_hi, oh_lo, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("n_bits", "block", "interpret"))
 def join_hash(keys: jnp.ndarray, valid: jnp.ndarray, *, n_bits: int,
               block: int = DEFAULT_BLOCK, interpret: bool = False
@@ -172,9 +229,11 @@ def join_hash_host(keys: jnp.ndarray, valid: jnp.ndarray, *, n_bits: int
                      jnp.int32(1 << n_bits))
 
 
-@functools.partial(jax.jit, static_argnames=("n_bits", "block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_bits", "block", "multi_pass",
+                                             "interpret"))
 def build_table(keys: jnp.ndarray, valid: jnp.ndarray, *, n_bits: int,
-                block: int = DEFAULT_BLOCK, interpret: bool = False
+                block: int = DEFAULT_BLOCK, multi_pass: bool | None = None,
+                interpret: bool = False
                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """(bucket (n,), rank (n,), hist (P,)) — hash + stable rank in ONE pass.
 
@@ -182,33 +241,59 @@ def build_table(keys: jnp.ndarray, valid: jnp.ndarray, *, n_bits: int,
     valid rows per bucket (the sentinel bin is dropped).  With the exclusive
     scan of hist as bucket offsets, `offs[bucket] + rank` lays the rows out
     as a compact per-bucket hash table in arrival order.
+
+    `multi_pass` selects the factored two-level histogram (recursion on the
+    high hash bits) of `_build_table_multi_kernel`; the default (None) picks
+    it automatically once `n_bits` exceeds `SINGLE_PASS_BITS` — where the
+    single-pass one-hot would force tiny tiles.  Outputs are bit-identical
+    either way.
     """
     n, w = keys.shape
     p = 1 << n_bits
     if n == 0:
         return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
                 jnp.zeros((p,), jnp.int32))
-    block = _auto_block(block, n_bits)
+    if multi_pass is None:
+        multi_pass = n_bits > SINGLE_PASS_BITS
+    multi_pass = multi_pass and n_bits >= 2
+    if multi_pass:
+        lo_bits = n_bits // 2
+        nh, nl = 1 << (n_bits - lo_bits), 1 << lo_bits
+        block = _auto_block_multi(block, n_bits, lo_bits)
+        kernel = functools.partial(_build_table_multi_kernel, n_bits=n_bits,
+                                   lo_bits=lo_bits, block=block)
+        hist_spec = pl.BlockSpec((nh + 1, nl), lambda i: (0, 0))
+        hist_shape = jax.ShapeDtypeStruct((nh + 1, nl), jnp.int32)
+    else:
+        block = _auto_block(block, n_bits)
+        kernel = functools.partial(_build_table_kernel, n_bits=n_bits,
+                                   block=block)
+        hist_spec = pl.BlockSpec((p + 1,), lambda i: (0,))
+        hist_shape = jax.ShapeDtypeStruct((p + 1,), jnp.int32)
     kp = jnp.pad(keys, ((0, -n % block), (0, 0)))
     vp = jnp.pad(valid.astype(jnp.int32), (0, -n % block))  # pads -> sentinel
     grid = (kp.shape[0] // block,)
     bkt, rank, hist = pl.pallas_call(
-        functools.partial(_build_table_kernel, n_bits=n_bits, block=block),
+        kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((block, w), lambda i: (i, 0)),
                   pl.BlockSpec((block,), lambda i: (i,))],
         out_specs=(
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((p + 1,), lambda i: (0,)),         # revisited carry
+            hist_spec,                                      # revisited carry
         ),
         out_shape=(
             jax.ShapeDtypeStruct((kp.shape[0],), jnp.int32),
             jax.ShapeDtypeStruct((kp.shape[0],), jnp.int32),
-            jax.ShapeDtypeStruct((p + 1,), jnp.int32),
+            hist_shape,
         ),
         interpret=interpret,
     )(kp, vp)
+    if multi_pass:
+        # Drop the sentinel row (hi = nh); valid buckets are hi·nl + lo, so
+        # the row-major reshape IS the flat (P,) histogram.
+        return bkt[:n], rank[:n], hist[:nh].reshape(p)
     return bkt[:n], rank[:n], hist[:p]
 
 

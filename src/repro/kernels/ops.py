@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from . import (build_probe, bucket_pack as _bp, hash_partition as _hp,
                join_probe as _jp, map_pack as _mp, route_cells as _rc,
-               segment_histogram as _sh)
+               scatter_pack as _sp, segment_histogram as _sh)
 
 INTERPRET = (os.environ.get("REPRO_PALLAS_INTERPRET", "") == "1"
              or jax.default_backend() != "tpu")
@@ -85,6 +85,30 @@ def map_pack(rows: jnp.ndarray, routes, ptable: jnp.ndarray, k: int,
                                  n_dev=n_dev, cap=cap)
     return _mp.map_pack(rows, ptable, routes=routes, k=k, n_dev=n_dev,
                         cap=cap)
+
+
+def scatter_pack(rows: jnp.ndarray, routes, ptable: jnp.ndarray, k: int,
+                 n_dev: int, cap: int):
+    """Fused map phase with in-kernel scatter assembly — see
+    kernels/scatter_pack.py.  Bit-identical to `map_pack`; off-TPU this
+    routes to the scatter-assemble vectorized-XLA twin (not interpret
+    mode), the production hot path there."""
+    if INTERPRET:
+        return _sp.scatter_pack_host(rows, ptable, routes=routes, k=k,
+                                     n_dev=n_dev, cap=cap)
+    return _sp.scatter_pack(rows, ptable, routes=routes, k=k, n_dev=n_dev,
+                            cap=cap)
+
+
+def expand_rows(left: jnp.ndarray, right: jnp.ndarray, counts: jnp.ndarray,
+                lo: jnp.ndarray, perm: jnp.ndarray, cap: int):
+    """Gather-free prefix-sum expansion of a probe result — see
+    kernels/scatter_pack.py.  Off-TPU this routes to the bit-identical
+    vectorized-XLA twin (not interpret mode); interpret-mode kernel
+    validation lives in the tests."""
+    if INTERPRET:
+        return _sp.expand_rows_host(left, right, counts, lo, perm, cap=cap)
+    return _sp.expand_rows(left, right, counts, lo, perm, cap=cap)
 
 
 def map_count(rows: jnp.ndarray, routes, k: int, n_src: int):

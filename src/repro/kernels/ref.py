@@ -198,6 +198,38 @@ def map_count_ref(rows: jnp.ndarray, routes, k: int, n_src: int
     return counts[:n_src * k].reshape(n_src, k)
 
 
+def scatter_pack_ref(rows: jnp.ndarray, ptable: jnp.ndarray, routes, k: int,
+                     n_dev: int, cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter-assemble oracle — semantically the staged map-phase
+    composition of `map_pack_ref` (the in-kernel scatter changes HOW the
+    buffer is written, never WHAT it holds), kept as its own name so the
+    `scatter_pack` kernels test against an explicit ground truth."""
+    return map_pack_ref(rows, ptable, routes, k, n_dev, cap)
+
+
+def expand_rows_ref(left: jnp.ndarray, right: jnp.ndarray,
+                    counts: jnp.ndarray, lo: jnp.ndarray, perm: jnp.ndarray,
+                    cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Prefix-sum expansion oracle: slot t of the (cap, wl + wr) output is
+    ``left[li] ++ right[perm[lo[li] + t - off[li]]]`` where li is the row
+    whose [off, off + counts) window covers t.  searchsorted + plain jnp
+    gathers — oracles may gather (and must stay linear: `_local_join`'s
+    use_kernels=False arm runs this at million-row caps, where the kernel's
+    O(cap·n_l) dense compare-count would allocate terabytes); the
+    gather-free contract belongs to the kernel lowering."""
+    n_l = left.shape[0]
+    n_r = right.shape[0]
+    if n_l == 0 or n_r == 0:
+        return (jnp.full((cap, left.shape[1] + right.shape[1]), jnp.int32(-1),
+                         left.dtype), jnp.zeros((cap,), bool))
+    off = jnp.cumsum(counts) - counts
+    t = jnp.arange(cap, dtype=jnp.int32)
+    li = jnp.clip(jnp.searchsorted(off, t, side="right") - 1, 0, n_l - 1)
+    ri = perm[jnp.clip(lo[li] + t - off[li], 0, n_r - 1)]
+    out = jnp.concatenate([left[li], right[ri]], axis=1)
+    return out, t < counts.sum()
+
+
 def join_hash_ref(keys: jnp.ndarray, valid: jnp.ndarray, n_bits: int
                   ) -> jnp.ndarray:
     """Fused multi-column bucket hash of the `join_probe` family.

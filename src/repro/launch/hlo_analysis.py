@@ -178,6 +178,21 @@ def _groups_of(line: str) -> np.ndarray | None:
     return None
 
 
+def count_ops(text: str, op_name: str) -> int:
+    """Number of `op_name` ops in an HLO module, across ALL computations —
+    fusion bodies, while bodies, and called computations included, so an op
+    the compiler fused out of the entry computation still counts.
+
+    `op_name` is the HLO opcode as printed (e.g. "gather", "scatter",
+    "dynamic-slice", "all-to-all"); matching is exact on the parsed op kind,
+    so "gather" never matches "all-gather".  This is the structural gate
+    scripts/check_hlo.py builds on: the scatter-assemble and expansion paths
+    must lower with count_ops(hlo, "gather") == 0."""
+    comps, _ = _split_computations(text)
+    return sum(1 for comp in comps.values()
+               for op in comp.ops.values() if op.kind == op_name)
+
+
 @dataclass
 class RooflineTerms:
     flops: float

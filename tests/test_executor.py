@@ -376,6 +376,114 @@ def test_stable_argsort_locks_arrival_order(use_kernels):
         np.testing.assert_array_equal(np.asarray(buf_a)[b][:len(want)], want)
 
 
+@pytest.mark.parametrize("C", [1, 2, 4, 7])     # 7: ragged remainder tiles
+def test_overlap_shuffle_matches_serial_and_reference(C):
+    """The chunked map↔all-to-all pipeline must produce exactly the serial
+    path's result SET (chunk-major fragment arrival reorders rows, so the
+    contract is canonical-multiset, not positional) and the reference join."""
+    q = two_way()
+    data = skewed_join_dataset(q, 601, 40, skew={"B": 1.9}, seed=21)
+    plan = plan_skew_join(q, data, 8)
+    expect = reference_join(q, data)
+    serial = ShardedJoinExecutor(
+        plan, _mesh(), config=ExecutorConfig(out_capacity=65536))
+    got_serial = canonical(serial.result_rows(data))
+    np.testing.assert_array_equal(got_serial, expect)
+    ex = ShardedJoinExecutor(
+        plan, _mesh(),
+        config=ExecutorConfig(out_capacity=65536, overlap_shuffle=C))
+    got = canonical(ex.result_rows(data))
+    np.testing.assert_array_equal(got, got_serial)
+    assert ex.compile_count == 1
+
+
+def test_overlap_shuffle_staged_and_ref_paths():
+    """Chunking composes with the staged oracle and the pure-jnp ref path."""
+    q = two_way()
+    data = skewed_join_dataset(q, 300, 30, skew={"B": 1.5}, seed=22)
+    plan = plan_skew_join(q, data, 8)
+    expect = reference_join(q, data)
+    for use_kernels, fuse_map in ((True, False), (False, False)):
+        ex = ShardedJoinExecutor(
+            plan, _mesh(),
+            config=ExecutorConfig(out_capacity=32768, overlap_shuffle=3,
+                                  use_kernels=use_kernels, fuse_map=fuse_map))
+        np.testing.assert_array_equal(canonical(ex.result_rows(data)), expect)
+
+
+def test_overlap_warm_batches_zero_new_compiles():
+    """Chunked sessions stream warm: repeat batches (same shapes) compile
+    nothing new, per-chunk caps hold, and results stay reference-exact."""
+    q = two_way()
+    data = skewed_join_dataset(q, 640, 50, skew={"B": 1.7}, seed=23)
+    plan = plan_skew_join(q, data, 8)
+    expect = reference_join(q, data)
+    for C in (2, 4):
+        ex = ShardedJoinExecutor(
+            plan, _mesh(),
+            config=ExecutorConfig(out_capacity=65536, overlap_shuffle=C))
+        ses = ex.session().prepare(data)
+        res = ses.run_batch()
+        assert ex.compile_count == 1
+        for _ in range(3):
+            res = ses.run_batch()
+        assert ex.compile_count == 1            # zero new compiles when warm
+        assert res["shuffle_overflow"].sum() == 0
+        np.testing.assert_array_equal(
+            canonical(res["rows"][res["valid"]]), expect)
+
+
+def test_overlap_per_chunk_caps_are_ceil_divided():
+    """_derive_caps under overlap: the serial quantized cap ceil-divided by
+    C (NOT re-quantized), so total send-buffer rows match the serial plan."""
+    q = two_way()
+    data = skewed_join_dataset(q, 500, 40, skew={"B": 1.6}, seed=24)
+    plan = plan_skew_join(q, data, 8)
+    serial = ShardedJoinExecutor(
+        plan, _mesh(), config=ExecutorConfig(out_capacity=65536))
+    caps_serial = serial.session().prepare(data).caps
+    for C in (2, 4, 7):
+        ex = ShardedJoinExecutor(
+            plan, _mesh(),
+            config=ExecutorConfig(out_capacity=65536, overlap_shuffle=C))
+        caps = ex.session().prepare(data).caps
+        assert caps == {r: -(-c // C) for r, c in caps_serial.items()}
+
+
+def test_run_batch_result_is_lazy_mapping():
+    """run_batch returns a BatchResult Mapping: same six keys and values as
+    the old eager dict, materialized on access; session.stats accumulates
+    through the lazy pending queue (draining on property access)."""
+    from repro.core.executor import BatchResult
+    q = two_way()
+    data = skewed_join_dataset(q, 400, 40, skew={"B": 1.5}, seed=25)
+    plan = plan_skew_join(q, data, 8)
+    ex = ShardedJoinExecutor(plan, _mesh(),
+                             config=ExecutorConfig(out_capacity=65536))
+    ses = ex.session().prepare(data)
+    res = ses.run_batch()
+    assert isinstance(res, BatchResult)
+    assert set(res) == {"rows", "valid", "shuffle_overflow",
+                        "shuffle_overflow_by_rel", "join_overflow",
+                        "recv_counts"}
+    with pytest.raises(KeyError):
+        res["nope"]
+    assert res["shuffle_overflow_by_rel"].shape == (8, 2)
+    assert res["rows"] is res["rows"]           # cached after first access
+    np.testing.assert_array_equal(canonical(res["rows"][res["valid"]]),
+                                  reference_join(q, data))
+    # Unread batches park their overflow device-side; stats drains on access.
+    for _ in range(3):
+        ses.run_batch()
+    assert len(ses._pending) == 4
+    st = ses.stats
+    assert st["batches"] == 4
+    assert st["shuffle_overflow"].sum() == 0 and not ses._pending
+    # Mutation through the property is the live dict (run_with_retry's use).
+    ses.stats["retries"] += 1
+    assert ses.stats["retries"] == 1
+
+
 def test_disjoint_domains_empty_output():
     q = two_way()
     rng = np.random.default_rng(11)

@@ -161,6 +161,61 @@ def test_join_hash_and_build_table_bit_identity(m, n_bits):
                                       err_msg=f"path={name}")
 
 
+@pytest.mark.parametrize("n_bits", [2, 3, 7, 11])
+@pytest.mark.parametrize("m", [0, 1, 257])
+def test_build_table_multi_pass_bit_identical(m, n_bits):
+    """The factored (recursion-on-high-bits) build must be BIT-identical to
+    the single-pass one-hot build at every width — forced both ways, below
+    and above the SINGLE_PASS_BITS dispatch point."""
+    rng = np.random.default_rng(m + n_bits)
+    keys = jnp.asarray(rng.integers(0, 1 << 20, (m, 2)), jnp.int32)
+    valid = jnp.asarray(rng.random(m) > 0.2)
+    single = jp.build_table(keys, valid, n_bits=n_bits, multi_pass=False,
+                            interpret=True)
+    multi = jp.build_table(keys, valid, n_bits=n_bits, multi_pass=True,
+                           interpret=True)
+    host = jp.build_table_host(keys, valid, n_bits=n_bits)
+    for s, g, h, tag in zip(single, multi, host, ("bucket", "rank", "hist")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(s),
+                                      err_msg=f"{tag} n_bits={n_bits}")
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(h),
+                                      err_msg=f"{tag} n_bits={n_bits} host")
+
+
+def test_build_table_multi_pass_auto_dispatch_lifts_bucket_cap():
+    """n_bits > SINGLE_PASS_BITS auto-dispatches the factored kernel; the
+    probe built on it stays exact (the lifted ~2^14-bucket cap in action)."""
+    assert jp.SINGLE_PASS_BITS < 14
+    rng = np.random.default_rng(5)
+    n_l, n_r = 40, 120
+    bits = jp.SINGLE_PASS_BITS + 2
+    lk = rng.integers(0, 50, (n_l, 2))
+    rk = rng.integers(0, 50, (n_r, 2))
+    ones_l, ones_r = np.ones(n_l, bool), np.ones(n_r, bool)
+    matches = _assert_matches_ref(lk, ones_l, rk, ones_r, bits)
+    assert matches > 0
+
+
+def test_hash_partition_multi_pass_bit_identical():
+    """nbuckets past MAX_ONEHOT_BUCKETS takes the factored histogram kernel:
+    ids and histogram must match the single-pass formula exactly (including
+    the pad-correction on bucket 0)."""
+    from repro.kernels import hash_partition as hp
+    from repro.kernels.ref import MULT
+    rng = np.random.default_rng(9)
+    seed = 0x9E3779B1
+    for nb in (hp.MAX_ONEHOT_BUCKETS * 2, hp.MAX_ONEHOT_BUCKETS * 4):
+        keys = rng.integers(0, 1 << 31, size=1537).astype(np.int32)
+        ids, hist = kops.hash_partition(jnp.asarray(keys), seed, nb)
+        shift = 32 - (nb.bit_length() - 1)
+        want = ((keys.astype(np.uint32) * np.uint32(seed))
+                * np.uint32(MULT)) >> np.uint32(shift)
+        np.testing.assert_array_equal(np.asarray(ids), want.astype(np.int32))
+        np.testing.assert_array_equal(np.asarray(hist),
+                                      np.bincount(want, minlength=nb))
+        assert int(np.asarray(hist).sum()) == len(keys)  # pad correction
+
+
 def test_default_bits_table_sizing():
     assert jp.default_bits(8) == 4               # ~2·n buckets
     assert jp.default_bits(16384) == 15
