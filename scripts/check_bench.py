@@ -2,7 +2,8 @@
 
 Runs the executor-facing tables of benchmarks/run.py (executor_e2e,
 reduce_scaling, shuffle_scaling, fold_scaling, map_scaling, reduce_v2,
-recover_scaling, adapt_scaling, shuffle_overlap, kernel_throughput) and FAILS
+recover_scaling, adapt_scaling, shuffle_overlap, serve_scaling,
+kernel_throughput) and FAILS
 (exit 1) if any row reports a capacity overflow or a non-exact output — the
 silent-wrongness modes of the fixed-capacity data plane — or if a required
 table (or its BENCH_*.json artifact) is missing entirely.  Timing is reported
@@ -114,6 +115,33 @@ docs/architecture.md readers).  Every artifact is a single JSON object:
     here; what CI can and does enforce is that enabling the pipeline is
     FREE — bit-exact, recompile-free, latency-neutral.
 
+  BENCH_serve.json
+    n_devices        int     physical mesh size
+    workload         object  queries (list of query strings),
+                             distinct_queries (int, must be >= 3)
+    warmup           object  requests, wall_s, compiles (cold executables +
+                             step ladders built while the cache fills),
+                             exact (bool)
+    steady           object  requests, wall_s, qps, p50_ms, p99_ms,
+                             recompiles (int, must be 0 — every steady
+                             request replays a warm (structure, bucket)),
+                             hits, misses, cache_hit_rate (must be >= 0.9),
+                             exact (bool)
+    cache            object  ExecutableCache.stats snapshot: sessions,
+                             executors, hits, misses, evictions,
+                             executor_evictions, hit_rate, compiles,
+                             step_hits, evicted_steps
+    per_tenant       object  tenant -> requests, batches, rows_in, rows_out,
+                             retries, escalations, overflow, compiles,
+                             prepares, replacements
+    exact            bool    every request canonical-exact vs reference_join
+    Gate: every request bit-exact; >= 3 structurally distinct queries; the
+    steady phase recompiles NOTHING (the executable cache's reason to
+    exist) and its hit rate is >= 0.9; the fresh steady p99 must stay
+    within SERVE_P99_TOL of the committed artifact's p99 (the committed
+    value is read BEFORE this run deletes/regenerates the artifacts —
+    a loose 3x bound because the single-core CI container is noisy).
+
 New benchmarks follow the same shape: top-level scalars for the workload, one
 list of per-sweep-point entries each carrying its own `exact`/overflow fields
 (so this script can gate them), and a `row(...)` CSV line per entry.
@@ -138,11 +166,19 @@ def _derived(derived: str) -> dict[str, str]:
 
 
 def main() -> int:
+    # The serve p99 gate compares this run against the COMMITTED artifact, so
+    # read it before the deletion below wipes it.
+    committed_p99 = None
+    serve_path = os.path.join(_REPO, "BENCH_serve.json")
+    if os.path.exists(serve_path):
+        committed_p99 = (json.load(open(serve_path)).get("steady") or {}
+                         ).get("p99_ms")
     # Delete the committed artifacts first so the missing-artifact checks
     # below prove this run REGENERATED them (not that stale copies existed).
     for name in ("BENCH_shuffle.json", "BENCH_fold.json", "BENCH_map.json",
                  "BENCH_reduce.json", "BENCH_recover.json",
-                 "BENCH_adapt.json", "BENCH_overlap.json"):
+                 "BENCH_adapt.json", "BENCH_overlap.json",
+                 "BENCH_serve.json"):
         stale = os.path.join(_REPO, name)
         if os.path.exists(stale):
             os.remove(stale)
@@ -156,6 +192,7 @@ def main() -> int:
     bench.bench_recover_scaling()
     bench.bench_adapt_scaling()
     bench.bench_shuffle_overlap()
+    bench.bench_serve_scaling()
     bench.bench_kernel_throughput()
 
     failures: list[str] = []
@@ -474,6 +511,53 @@ def main() -> int:
                     f"than {OVERLAP_TOL:.2f}x over the serial shuffle "
                     f"({last.get('serial_us'):.0f}us) — the chunked "
                     f"map<->all_to_all pipeline must be latency-neutral")
+
+    # The serve table must exist and prove the multi-tenant serving
+    # contracts: every request bit-exact, >= 3 distinct query structures,
+    # zero steady-state recompiles, a warm cache, and no p99 cliff vs the
+    # committed artifact.
+    if not any(n.startswith("serve_scaling/") and "skipped" not in n
+               for n, _, _ in bench.ROWS):
+        failures.append(
+            "serve_scaling table missing (needs 8 devices — check "
+            "XLA_FLAGS xla_force_host_platform_device_count)")
+    if not os.path.exists(serve_path):
+        failures.append(f"missing artifact {serve_path}")
+    else:
+        report = json.load(open(serve_path))
+        steady = report.get("steady") or {}
+        if not report.get("exact"):
+            failures.append(
+                "BENCH_serve.json: a served request was not bit-exact vs "
+                "reference_join")
+        if (report.get("workload") or {}).get("distinct_queries", 0) < 3:
+            failures.append(
+                f"BENCH_serve.json: only "
+                f"{(report.get('workload') or {}).get('distinct_queries')} "
+                f"distinct query structures (the multi-tenant scenario needs "
+                f">= 3)")
+        if steady.get("recompiles", 1) != 0:
+            failures.append(
+                f"BENCH_serve.json: {steady.get('recompiles')} steady-state "
+                f"recompiles (every steady request replays a warm "
+                f"(structure, bucket) — the executable cache regressed)")
+        if steady.get("cache_hit_rate", 0.0) < 0.9:
+            failures.append(
+                f"BENCH_serve.json: steady cache hit rate "
+                f"{steady.get('cache_hit_rate')} below 0.9 (bucketing or the "
+                f"session cache regressed)")
+        # Latency regression vs the committed artifact.  Loose 3x bound:
+        # the single-core container's wall clock is noisy, and timing is
+        # otherwise never judged — this only catches a serving-path cliff
+        # (e.g. a re-prepare or sync sneaking into the steady loop).
+        SERVE_P99_TOL = 3.0
+        fresh_p99 = steady.get("p99_ms")
+        if committed_p99 and fresh_p99 and \
+                fresh_p99 > committed_p99 * SERVE_P99_TOL:
+            failures.append(
+                f"BENCH_serve.json: steady p99 {fresh_p99:.1f}ms exceeds "
+                f"{SERVE_P99_TOL:.1f}x the committed {committed_p99:.1f}ms — "
+                f"the warm serving path regressed")
 
     if failures:
         print("\nBENCH CHECK FAILED:", file=sys.stderr)

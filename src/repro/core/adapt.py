@@ -283,3 +283,48 @@ class DriftDetector:
         else:
             raise ValueError(f"unknown rebaseline action {action!r}")
         self.history.append((self.batches, action, tv))
+
+
+class TenantDriftBank:
+    """Per-tenant `DriftDetector`s behind one shared `AdaptPolicy`.
+
+    The multi-tenant serving engine (serve/join_engine.py) interleaves many
+    query streams on one mesh; each stream drifts independently, so one
+    global detector would smear tenant A's hot-key migration into tenant B's
+    stable baseline.  The bank lazily creates one detector per tenant on
+    `register` (seeded with that tenant's prepare-time expected loads) and
+    routes `observe` / `rebaseline` by tenant id.  Pure host-side, like the
+    detectors it holds."""
+
+    def __init__(self, policy: AdaptPolicy | None = None):
+        self.policy = policy or AdaptPolicy()
+        self.detectors: dict[object, DriftDetector] = {}
+
+    def register(self, tenant: object, expected_cell_loads: np.ndarray,
+                 **detector_kw) -> DriftDetector:
+        """(Re)create `tenant`'s detector around a fresh baseline.  Extra
+        keyword args go to `DriftDetector` (attrs, hh_frac, known_hhs)."""
+        det = DriftDetector(expected_cell_loads, self.policy, **detector_kw)
+        self.detectors[tenant] = det
+        return det
+
+    def get(self, tenant: object) -> DriftDetector | None:
+        return self.detectors.get(tenant)
+
+    def observe(self, tenant: object, loads: np.ndarray,
+                columns: Mapping[str, object] | None = None) -> str:
+        """Feed one executed batch of `tenant`'s stream and return the graded
+        verdict ('stable' / 'replace' / 'replan').  Unregistered tenants are
+        'stable' — the engine registers at prepare time."""
+        det = self.detectors.get(tenant)
+        if det is None:
+            return "stable"
+        det.observe_loads(loads)
+        if columns is not None:
+            det.observe_values(columns)
+        return det.assess()
+
+    def rebaseline(self, tenant: object, expected_cell_loads: np.ndarray,
+                   action: str, **kw) -> None:
+        det = self.detectors[tenant]
+        det.rebaseline(expected_cell_loads, action, **kw)

@@ -77,10 +77,6 @@ from .skewjoin import SkewJoinPlan
 INVALID = -1
 
 
-# Compiled-step cache bound per executor (see _compiled_step eviction note).
-_STEP_CACHE_MAX = 8
-
-
 # ---------------------------------------------------------------------------
 # Error taxonomy (the fault-tolerance layer's structured failures)
 # ---------------------------------------------------------------------------
@@ -211,6 +207,14 @@ class ExecutorConfig:
                                        # per chunk; remainder tiles pad to
                                        # the warm shapes).  ≤ 1: the serial
                                        # map -> one all_to_all oracle path
+    max_cached_steps: int = 32         # compiled-step LRU bound per executor:
+                                       # every retained executable pins real
+                                       # device memory, so a long-lived
+                                       # multi-tenant process must evict
+                                       # (generous default — a steady
+                                       # workload's working set is a handful
+                                       # of (shapes, caps) signatures;
+                                       # `evicted_steps` counts evictions)
 
 
 @dataclass(frozen=True)
@@ -667,6 +671,8 @@ class ShardedJoinExecutor:
         self._step_cache: dict[tuple, object] = {}
         self._count_fn = None
         self.compile_count = 0          # step builds (one per distinct key)
+        self.step_hits = 0              # warm step lookups (no build)
+        self.evicted_steps = 0          # steps dropped by the LRU bound
 
     # -- control plane ------------------------------------------------------
     def _shard(self, arr: np.ndarray) -> np.ndarray:
@@ -739,6 +745,7 @@ class ShardedJoinExecutor:
         f = self._step_cache.pop(key, None)
         if f is not None:
             self._step_cache[key] = f     # re-insert: LRU, not FIFO, eviction
+            self.step_hits += 1
             return f
         routes = self.routes
 
@@ -820,9 +827,11 @@ class ShardedJoinExecutor:
                                      out_specs=specs_out))
         # Bounded: one-shot run()s over ever-changing data derive fresh caps
         # each time, and each retained executable pins real memory — evict
-        # oldest-inserted so a long-lived executor can't grow without limit.
-        while len(self._step_cache) >= _STEP_CACHE_MAX:
+        # least-recently-used so a long-lived executor can't grow without
+        # limit (the pop/re-insert above keeps insertion order = recency).
+        while len(self._step_cache) >= max(int(cfg.max_cached_steps), 1):
             self._step_cache.pop(next(iter(self._step_cache)))
+            self.evicted_steps += 1
         self._step_cache[key] = f
         self.compile_count += 1
         return f

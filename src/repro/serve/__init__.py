@@ -1,6 +1,8 @@
 """repro.serve — batched serving substrate + self-healing join sessions."""
 from .serve_step import ServeFns, build_decode_step, build_prefill
 from .engine import Request, SelfHealingSession, ServingEngine
+from .join_engine import (ExecutableCache, JoinRequest, JoinServingEngine)
 
 __all__ = ["ServeFns", "build_decode_step", "build_prefill",
-           "Request", "ServingEngine", "SelfHealingSession"]
+           "Request", "ServingEngine", "SelfHealingSession",
+           "ExecutableCache", "JoinRequest", "JoinServingEngine"]

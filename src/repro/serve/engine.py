@@ -21,6 +21,7 @@ class docstring; tests/test_chaos.py drives every fault path.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping
 
@@ -58,6 +59,7 @@ class ServingEngine:
         self.cache = jax.device_put(api.init_cache(cfg, batch_slots, max_seq),
                                     self.fns.cache_shardings)
         self.queue: list[Request] = []
+        self.waiting: deque[Request] = deque()   # FIFO of unadmitted requests
         self.slots: list[Request | None] = [None] * batch_slots
         # Per-slot host state.
         self.pos = np.zeros(batch_slots, np.int32)
@@ -70,6 +72,7 @@ class ServingEngine:
     def submit(self, prompt: list[int], max_new_tokens: int) -> Request:
         req = Request(len(self.queue), list(prompt), max_new_tokens)
         self.queue.append(req)
+        self.waiting.append(req)
         return req
 
     def run(self, max_ticks: int = 10_000) -> list[Request]:
@@ -84,16 +87,22 @@ class ServingEngine:
 
     # -- internals --------------------------------------------------------------
     def _admit(self) -> None:
-        waiting = [r for r in self.queue
-                   if not r.done and r not in self.slots]
+        # O(free slots) amortized: submit() enqueues once, each request is
+        # popped at most once — no per-tick rescan of the full request list
+        # (the old scan was O(queue x slots) per tick).
         for i in range(self.B):
-            if self.slots[i] is None and waiting:
-                req = waiting.pop(0)
+            if self.slots[i] is not None:
+                continue
+            while self.waiting:
+                req = self.waiting.popleft()
+                if req.done:                      # cancelled before admission
+                    continue
                 self.slots[i] = req
                 self.pos[i] = 0
                 self.pending[i] = list(req.prompt)
                 self.next_tok[i] = self.pending[i].pop(0)
                 self._reset_slot(i)
+                break
 
     def _reset_slot(self, i: int) -> None:
         """Zero slot i's recurrent state (KV rows are masked by position, but

@@ -248,3 +248,36 @@ def test_prepare_rejects_corrupted_inputs():
     s = ex.session().prepare(data)
     with pytest.raises(InputValidationError, match=r"relation 'R'"):
         s.run_batch(bad)
+
+
+def test_step_cache_bounded_with_eviction_counter():
+    """`max_cached_steps` bounds the compiled-step LRU: the oldest signature
+    is evicted (counted in `evicted_steps`), re-running it recompiles but
+    stays exact, and warm lookups count in `step_hits`."""
+    q = two_way()
+    data = skewed_join_dataset(q, 300, 30, skew={"B": 1.2}, seed=31)
+    _, ex = _executor(data, q, max_cached_steps=2)
+    expect = reference_join(q, data)
+    probe = ex.session().prepare(data)
+    base = dict(probe.caps)
+
+    def run_with(scale):
+        caps = {name: quantize_capacity(c * scale) for name, c in base.items()}
+        s = ex.session().prepare(data, caps=caps, placement=probe.placement)
+        res = s.run_batch()
+        np.testing.assert_array_equal(canonical(res["rows"][res["valid"]]),
+                                      expect)
+
+    run_with(1)                       # signature A
+    run_with(2)                       # signature B -> cache full
+    assert ex.compile_count == 2 and ex.evicted_steps == 0
+    run_with(4)                       # signature C evicts A (LRU)
+    assert ex.evicted_steps == 1
+    assert len(ex._step_cache) == 2
+    hits0 = ex.step_hits
+    run_with(4)                       # C is warm
+    assert ex.step_hits == hits0 + 1 and ex.compile_count == 3
+    run_with(1)                       # A was evicted -> recompiles, still exact
+    assert ex.compile_count == 4
+    assert ex.evicted_steps == 2      # re-inserting A evicted B
+    assert len(ex._step_cache) == 2

@@ -80,3 +80,27 @@ def test_occupancy_metric():
     eng.submit([1, 2, 3], 4)
     eng._admit()
     assert eng.occupancy() == 0.25
+
+
+def test_many_requests_admit_fifo_without_rescans():
+    """Admission is a FIFO deque pop, not a full-queue rescan: submitting
+    many requests fills free slots in submission order and leaves exactly
+    the unadmitted tail waiting."""
+    eng, cfg = _engine(slots=3)
+    n = 50
+    reqs = [eng.submit([1 + (i % 7), 2, 3], 4) for i in range(n)]
+    assert len(eng.waiting) == n
+    eng._admit()
+    assert [eng.slots[i] for i in range(3)] == reqs[:3]   # FIFO order
+    assert len(eng.waiting) == n - 3
+    # A request cancelled before admission is skipped, not seated.
+    reqs[3].done = True
+    reqs[0].done = True                                    # finished...
+    eng.slots[0] = None                                    # ...slot freed
+    eng._admit()
+    assert eng.slots[0] is reqs[4]
+    assert len(eng.waiting) == n - 5                       # popped 3,4
+    # Draining the engine admits everyone else exactly once.
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert not eng.waiting
